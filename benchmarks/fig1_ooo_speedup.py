@@ -1,0 +1,57 @@
+"""Paper Fig. 1: out-of-order vs in-order scheduling speedup vs graph size.
+
+Workloads: LU-factorization dataflow DAGs of bordered block-diagonal
+("arrow") matrices — the canonical circuit/power-grid structure behind
+sparse-matrix-factorization kernels — on the 16x16 (256 PE) overlay, exactly
+the paper's evaluation setup. The paper's own matrices are not published;
+sizes sweep a few K to ~500K nodes as in Fig. 1.
+
+Output CSV: name,us_per_call,derived  where derived = inorder/ooo speedup.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import workloads as wl
+from repro.core.overlay import OverlayConfig, simulate
+from repro.core.partition import build_graph_memory
+
+# (blocks, block_size, border): graph sizes ~15K .. ~470K nodes
+SWEEP = [(4, 10, 8), (8, 10, 8), (16, 10, 8), (32, 10, 8), (64, 10, 8)]
+SWEEP_FULL = SWEEP + [(96, 10, 8), (128, 10, 8)]
+
+
+def run(full: bool = False, nx: int = 16, ny: int = 16):
+    rows = []
+    for blocks, s, w in (SWEEP_FULL if full else SWEEP):
+        g = wl.arrow_lu_graph(blocks, s, w, seed=3)
+        cyc = {}
+        wall = {}
+        for sched in ("ooo", "inorder"):
+            gm = build_graph_memory(g, nx, ny, criticality_order=(sched == "ooo"))
+            t0 = time.time()
+            r = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000))
+            wall[sched] = time.time() - t0
+            assert r.done, (blocks, sched)
+            cyc[sched] = r.cycles
+        rows.append({
+            "name": f"fig1_arrow_n{g.num_nodes}",
+            "us_per_call": round(1e6 * (wall["ooo"] + wall["inorder"]), 1),
+            "derived": round(cyc["inorder"] / cyc["ooo"], 4),
+            "nodes": g.num_nodes,
+            "edges": g.num_edges,
+            "cycles_ooo": cyc["ooo"],
+            "cycles_inorder": cyc["inorder"],
+        })
+    return rows
+
+
+def main(full: bool = False):
+    print("name,us_per_call,derived")
+    for r in run(full):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -1,0 +1,107 @@
+"""Perf-iteration driver (§Perf): re-lower one dry-run cell with config
+overrides and diff the roofline terms against the stored baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch starcoder2-7b \
+      --shape train_4k --set attn_chunk=2048 loss_chunk=1024 --tag iter1
+
+Overrides are typed dataclasses.replace on the arch config; --profile prints
+the top HBM-traffic contributors (trip-count-aware) for hypothesis building.
+Results append to experiments/perf/<arch>__<shape>__<tag>.json.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+
+
+def _coerce(v):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        out[k] = _coerce(v)
+    return out
+
+
+def apply_overrides(cfg, ov):
+    """Supports nested keys like ssm.chunk=64 / moe.capacity_factor=1.0."""
+    flat = {k: v for k, v in ov.items() if "." not in k}
+    nested: dict = {}
+    for k, v in ov.items():
+        if "." in k:
+            head, tail = k.split(".", 1)
+            nested.setdefault(head, {})[tail] = v
+    for head, kv in nested.items():
+        sub = getattr(cfg, head)
+        flat[head] = dataclasses.replace(sub, **kv)
+    return dataclasses.replace(cfg, **flat) if flat else cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--set", nargs="*", default=[], help="cfg field overrides k=v")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--profile", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--baseline", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    ov = parse_overrides(args.set)
+    cfg = apply_overrides(cfg, ov)
+
+    rec = dryrun.run_cell(args.arch, args.shape, args.mesh,
+                          cfg_override=cfg, want_profile=args.profile)
+    rec["overrides"] = ov
+    rec["tag"] = args.tag
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    base_path = os.path.join(args.baseline, f"{args.arch}__{args.shape}__{args.mesh}.json")
+    base = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+
+    if rec["status"] != "OK":
+        print("STATUS:", rec["status"], rec.get("error", ""))
+        return
+    r = rec["roofline"]
+    print(f"\n=== {args.arch} x {args.shape} x {args.mesh}  [{args.tag}]  {ov} ===")
+    hdr = f"{'term':12s} {'baseline':>12s} {'now':>12s} {'delta':>8s}"
+    print(hdr)
+    for term in ("compute_s", "memory_s", "collective_s"):
+        b = base["roofline"][term] if base and base.get("status") == "OK" else float("nan")
+        n = r[term]
+        d = (n - b) / b * 100 if b and b == b else float("nan")
+        print(f"{term:12s} {b:12.4f} {n:12.4f} {d:7.1f}%")
+    print(f"useful_flops_frac: {r['useful_flops_frac']}")
+    if args.profile and "profile" in rec:
+        print("\ntop HBM-traffic contributors (GB, trip-aware):")
+        for k, v in list(rec["profile"].items())[:15]:
+            print(f"  {v['bytes']/1e9:10.2f} GB  {v['flops']/1e12:8.2f} TF  {k[:90]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Scheduler-kernel microbenchmarks: hierarchical LOD pick rate.
+
+Times the jnp reference scheduler step (select + clear) at the paper's
+geometry (256 PEs x 256 flag words == 8 BRAMs' worth of flags) and larger.
+On TPU the Pallas kernel replaces it; interpret-mode timing is not physical,
+so the CSV reports the compiled-jnp path (the simulator's actual hot spot).
+
+Output CSV: name,us_per_call,derived (derived = selects/s).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=50):
+    fn(*args)[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    step = jax.jit(ref.schedule_step_ref)
+    for pes, words in [(256, 8), (256, 64), (256, 256), (1024, 64)]:
+        bits = jnp.asarray(
+            rng.integers(0, 2**32, size=(pes, words), dtype=np.uint32))
+        us = _time(step, bits) * 1e6
+        rows.append({
+            "name": f"lod_schedule_{pes}x{words}",
+            "us_per_call": round(us, 2),
+            "derived": round(pes / (us * 1e-6), 0),
+        })
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

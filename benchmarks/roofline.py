@@ -1,0 +1,55 @@
+"""Roofline summary: reads the dry-run JSON records and prints per-cell
+compute/memory/collective terms + dominant bottleneck (EXPERIMENTS §Roofline).
+
+Output CSV: name,us_per_call,derived where us_per_call = dominant roofline
+term (per-step, in us) and derived = "<dominant>:<useful_flops_frac>".
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load(mesh: str = "single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append(rec)
+    return rows
+
+
+def run(mesh: str = "single"):
+    out = []
+    for rec in load(mesh):
+        name = f"roofline_{rec['arch']}__{rec['shape']}"
+        if rec["status"] != "OK":
+            out.append({"name": name, "us_per_call": 0.0,
+                        "derived": rec["status"], "rec": rec})
+            continue
+        r = rec["roofline"]
+        terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}
+        dom = max(terms, key=terms.get)
+        frac = r.get("useful_flops_frac")
+        out.append({
+            "name": name,
+            "us_per_call": round(terms[dom] * 1e6, 1),
+            "derived": f"{dom}:{'' if frac is None else round(frac, 3)}",
+            "rec": rec,
+        })
+    return out
+
+
+def main(mesh: str = "single"):
+    print("name,us_per_call,derived")
+    for r in run(mesh):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    import sys
+    main("multi" if "--multi" in sys.argv else "single")

@@ -1,0 +1,44 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver.
+
+  table1    — RDY-flag overhead / FIFO-elimination capacity model (Table I, §III)
+  kernels   — scheduler (hierarchical LOD) pick-rate microbench
+  fig1      — OoO vs in-order speedup vs graph size (paper Fig. 1)
+  roofline  — per (arch x shape) roofline terms from the dry-run artifacts
+
+``python -m benchmarks.run [--full]`` runs everything (fig1 sweeps to ~470K
+nodes with --full; default tops out near ~235K to keep wall-time sane).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    print("name,us_per_call,derived")
+
+    from benchmarks import table1_resources
+    for name, value, paper in table1_resources.run()[0]:
+        note = f" (paper: {paper})" if paper is not None else ""
+        print(f"{name},0.0,{value}{note}", flush=True)
+
+    from benchmarks import kernel_bench
+    for r in kernel_bench.run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
+    from benchmarks import fig1_ooo_speedup
+    for r in fig1_ooo_speedup.run(full=full):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
+    from benchmarks import roofline
+    rows = roofline.run("single")
+    if rows:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    else:
+        print("roofline_pending,0.0,run repro.launch.dryrun first", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON records.
+
+  PYTHONPATH=src python -m benchmarks.summarize_dryrun [--mesh single|multi|both]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16 * 1024**3
+
+
+def load(d, mesh):
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/1024**3:.2f}"
+
+
+def table(mesh, d="experiments/dryrun"):
+    rows = load(d, mesh)
+    print(f"\n### Mesh `{mesh}` ({'512' if mesh == 'multi' else '256'} chips)\n")
+    print("| arch | shape | status | GB/chip (args) | flops/chip | compute s | memory s | collective s | dominant | useful |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    n_ok = n_fail = n_skip = 0
+    for r in rows:
+        if r["status"] == "SKIP":
+            n_skip += 1
+            print(f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | — | — | — | — |")
+            continue
+        if r["status"] != "OK":
+            n_fail += 1
+            print(f"| {r['arch']} | {r['shape']} | **FAIL** | — | — | — | — | — | — | — |")
+            continue
+        n_ok += 1
+        ro = r["roofline"]
+        terms = {"compute": ro["compute_s"], "memory": ro["memory_s"],
+                 "collective": ro["collective_s"]}
+        dom = max(terms, key=terms.get)
+        args_gb = r["memory"].get("argument_size_in_bytes", 0) / 1024**3
+        flops = r["hlo_walk"]["flops"]
+        uf = ro.get("useful_flops_frac")
+        fits = "" if args_gb <= 16 else " ⚠OOM"
+        print(f"| {r['arch']} | {r['shape']} | OK | {args_gb:.2f}{fits} | "
+              f"{flops:.3g} | {ro['compute_s']:.4f} | {ro['memory_s']:.4f} | "
+              f"{ro['collective_s']:.4f} | {dom} | "
+              f"{'' if uf is None else round(uf, 3)} |")
+    print(f"\nOK={n_ok} SKIP={n_skip} FAIL={n_fail}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        table(m, args.dir)
+
+
+if __name__ == "__main__":
+    main()

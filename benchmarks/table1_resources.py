@@ -1,0 +1,49 @@
+"""Paper Table I + §III capacity claims: the memory-overhead model.
+
+FPGA area/frequency cannot be measured in simulation; what CAN be reproduced
+exactly is the paper's BRAM arithmetic:
+  * RDY bit-flag overhead: 2 * ceil(512/32) = 32 of 512 words ~ 6.25%,
+  * deadlock-free in-order FIFO provisioning -> ~100K nodes+edges at 256 PEs,
+  * OoO (no FIFOs) -> ~5x larger graphs.
+Paper reference values are included in the CSV's ``derived`` comments.
+
+Output CSV: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import partition as pt
+
+PAPER = {
+    "flag_overhead": 0.0625,          # "~6% overhead"
+    "inorder_capacity": 100_000,       # "~100K nodes and edges"
+    "capacity_ratio": 5.0,             # "~5x larger input graphs"
+}
+
+
+def run(num_pes: int = 256):
+    t0 = time.time()
+    rows = []
+    ov = pt.rdy_flag_overhead()
+    rows.append(("table1_flag_overhead", ov, PAPER["flag_overhead"]))
+    ino = pt.capacity_elements(num_pes, "inorder")
+    ooo = pt.capacity_elements(num_pes, "ooo")
+    rows.append(("table1_inorder_capacity_elems", ino["elements"], PAPER["inorder_capacity"]))
+    rows.append(("table1_ooo_capacity_elems", ooo["elements"], None))
+    rows.append(("table1_capacity_ratio", ooo["elements"] / ino["elements"], PAPER["capacity_ratio"]))
+    rows.append(("table1_fifo_words_freed", ino["fifo_words"], None))
+    us = 1e6 * (time.time() - t0)
+    return rows, us
+
+
+def main():
+    rows, us = run()
+    print("name,us_per_call,derived")
+    for name, value, paper in rows:
+        note = f" (paper: {paper})" if paper is not None else ""
+        print(f"{name},{us:.1f},{value}{note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: run a sparse-matrix-factorization dataflow graph on the
+out-of-order token-dataflow overlay and compare against in-order FCFS.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import workloads as wl
+from repro.core.graph import reference_evaluate
+from repro.core.overlay import OverlayConfig, simulate
+from repro.core.partition import build_graph_memory
+
+# 1. A dataflow graph: LU factorization of a bordered block-diagonal matrix
+#    (the structure of circuit/power-grid matrices).
+graph = wl.arrow_lu_graph(blocks=8, block_size=10, border=8, seed=0)
+print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges")
+
+# 2. Reference answer (topological evaluation).
+ref = reference_evaluate(graph)
+
+# 3. Place it on a 16x16 overlay, local memories in decreasing criticality
+#    order (the paper's static labeling), and simulate cycle-accurately.
+for sched in ("ooo", "inorder"):
+    gm = build_graph_memory(graph, 16, 16, criticality_order=(sched == "ooo"))
+    res = simulate(gm, OverlayConfig(scheduler=sched))
+    ok = np.allclose(res.values, ref, rtol=1e-5, atol=1e-5)
+    print(f"{sched:8s}: {res.cycles:6d} cycles | values match reference: {ok} "
+          f"| NoC deflections: {res.deflections}")

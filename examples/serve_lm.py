@@ -1,0 +1,12 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-130m]
+"""
+import sys
+
+from repro.launch.serve import main
+
+argv = sys.argv[1:]
+if not any(a.startswith("--arch") for a in argv):
+    argv = ["--arch", "qwen2-0.5b"] + argv
+main(argv + ["--smoke", "--batch", "8", "--prompt-len", "32", "--gen", "24"])

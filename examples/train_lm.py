@@ -1,0 +1,19 @@
+"""End-to-end driver: train a small LM for a few hundred steps with WSD
+AdamW, deterministic data, checkpointing and auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~200 steps
+    PYTHONPATH=src python examples/train_lm.py --resume   # continues
+
+This is the same production driver the cluster would run
+(repro.launch.train); kill it mid-run and rerun to see restart recovery.
+"""
+import sys
+
+from repro.launch.train import main
+
+args = [
+    "--arch", "qwen2-0.5b", "--smoke",
+    "--steps", "200", "--batch", "16", "--seq", "32",
+    "--lr", "1e-2", "--ckpt", "/tmp/repro_train_lm", "--ckpt-every", "50",
+]
+main(args + sys.argv[1:])

@@ -1,0 +1,11 @@
+# The paper's primary contribution: a token-dataflow overlay with out-of-order
+# ready-node scheduling (packed RDY bit-flags + hierarchical leading-one
+# detect + static criticality-ordered local memory), a cycle-accurate Hoplite
+# NoC model, and shard_map distribution mapping the overlay torus onto ICI.
+from .graph import (  # noqa: F401
+    OP_ADD, OP_DIV, OP_INPUT, OP_MUL, OP_SUB,
+    DataflowGraph, GraphBuilder, reference_evaluate,
+)
+from .criticality import criticality  # noqa: F401
+from .partition import GraphMemory, build_graph_memory  # noqa: F401
+from .overlay import OverlayConfig, SimResult, simulate  # noqa: F401

@@ -1,0 +1,126 @@
+"""Cycle-accurate Hoplite NoC model (Kapre & Gray, FPL'15) in JAX.
+
+Hoplite is a unidirectional 2D torus with deflection routing and no
+buffering: each router owns two pipeline registers (E and S outputs), takes
+inputs from its west and north neighbours plus a local PE injection port, and
+routes dimension-ordered (X then Y).
+
+Arbitration (documented policy, faithful to Hoplite's austere router):
+  * N input has priority (it already turned onto the Y ring);
+  * a W packet that wants S/eject but loses arbitration deflects E (stays on
+    the X ring and comes around);
+  * a N packet never needs deflection: it only competes for S/eject and wins
+    both (N at destination always ejects because N has eject priority);
+  * PE injection is lowest priority and stalls until its port is free;
+    a local packet (dst == self) consumes the eject port for one cycle.
+
+State is SoA: a packet field dict of [nx, ny] arrays. Torus links are
+``jnp.roll`` on a single device; the shard_map overlay swaps in
+ppermute-backed shifts (ICI hop == NoC hop).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PKT_FIELDS = ("valid", "dst_x", "dst_y", "dst_slot", "opidx", "value")
+
+
+def empty_packets(nx: int, ny: int):
+    z = lambda dt: jnp.zeros((nx, ny), dtype=dt)
+    return dict(
+        valid=z(jnp.bool_), dst_x=z(jnp.int32), dst_y=z(jnp.int32),
+        dst_slot=z(jnp.int32), opidx=z(jnp.int32), value=z(jnp.float32),
+    )
+
+
+def pk_where(cond, a, b):
+    return {k: jnp.where(cond, a[k], b[k]) for k in PKT_FIELDS}
+
+
+def pk_invalidate(p, keep):
+    out = dict(p)
+    out["valid"] = p["valid"] & keep
+    return out
+
+
+def roll_shift_e(link_e):
+    """Packet on (x, y)'s E register arrives at (x+1, y)'s W input."""
+    return {k: jnp.roll(v, 1, axis=0) for k, v in link_e.items()}
+
+
+def roll_shift_s(link_s):
+    return {k: jnp.roll(v, 1, axis=1) for k, v in link_s.items()}
+
+
+def router_cycle(link_e, link_s, inject, *, shift_e=roll_shift_e, shift_s=roll_shift_s,
+                 x0=0, y0=0, eject_capacity=1):
+    """One NoC cycle for every router in parallel.
+
+    Args:
+      link_e, link_s: packet dicts on the E/S output registers.
+      inject: packet dict offered by each PE this cycle.
+      shift_e/shift_s: torus shift implementations (roll or ppermute).
+      x0, y0: global coordinate offsets of this shard's router tile (0 on a
+        single device; axis_index * tile under shard_map).
+      eject_capacity: PE packets/cycle. 2 models the paper's §II-C BRAM
+        multipumping (extra virtual write ports): N and W can eject in the
+        same cycle, removing the W-at-destination deflection.
+
+    Returns:
+      (new_link_e, new_link_s, ejects [list of packet dicts], accepted)
+    """
+    nx, ny = link_e["valid"].shape
+    my_x = jnp.arange(nx, dtype=jnp.int32)[:, None] + x0
+    my_y = jnp.arange(ny, dtype=jnp.int32)[None, :] + y0
+
+    w_in = shift_e(link_e)   # arrives from the west
+    n_in = shift_s(link_s)   # arrives from the north
+
+    def at_dst(p):
+        return p["valid"] & (p["dst_x"] == my_x) & (p["dst_y"] == my_y)
+
+    def wants_e(p):
+        return p["valid"] & (p["dst_x"] != my_x)
+
+    def wants_s(p):
+        return p["valid"] & (p["dst_x"] == my_x) & (p["dst_y"] != my_y)
+
+    # --- eject arbitration: N beats W ---
+    n_ej = at_dst(n_in)
+    if eject_capacity >= 2:
+        w_ej = at_dst(w_in)                       # both may eject
+    else:
+        w_ej = at_dst(w_in) & ~n_ej
+    eject = pk_where(n_ej, n_in, pk_invalidate(w_in, w_ej & ~n_ej))
+    eject2 = pk_invalidate(w_in, w_ej & n_ej) if eject_capacity >= 2 else None
+
+    # --- S output: N continues south unless it ejected ---
+    n_takes_s = n_in["valid"] & ~n_ej
+    w_takes_s = wants_s(w_in) & ~n_takes_s
+    # --- E output: W continues east, or deflects E on any lost arbitration ---
+    w_takes_e = wants_e(w_in) | (wants_s(w_in) & n_takes_s) | (at_dst(w_in) & ~w_ej)
+
+    # --- PE injection (lowest priority) ---
+    inj_local = at_dst(inject)
+    inj_e = wants_e(inject) & ~w_takes_e
+    inj_s = wants_s(inject) & ~n_takes_s & ~w_takes_s
+    if eject_capacity >= 2:
+        free2 = ~eject2["valid"]
+        inj_ej = inj_local & (~eject["valid"] | free2)
+        inj_to_slot2 = inj_ej & eject["valid"]    # first slot taken by network
+        eject2 = pk_where(inj_to_slot2, inject, eject2)
+        eject = pk_where(inj_ej & ~inj_to_slot2, inject, eject)
+    else:
+        inj_ej = inj_local & ~eject["valid"]
+        eject = pk_where(inj_ej, inject, eject)
+    accepted = inj_e | inj_s | inj_ej
+
+    new_e = pk_where(w_takes_e, w_in, pk_invalidate(inject, inj_e))
+    new_s = pk_where(n_takes_s, n_in,
+                     pk_where(w_takes_s, w_in, pk_invalidate(inject, inj_s)))
+    ejects = [eject] if eject2 is None else [eject, eject2]
+    return new_e, new_s, ejects, accepted
+
+
+def links_empty(link_e, link_s):
+    return ~(link_e["valid"].any() | link_s["valid"].any())

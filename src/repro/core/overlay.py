@@ -1,0 +1,329 @@
+"""Cycle-accurate token-dataflow overlay simulator (paper §II), in JAX.
+
+The whole simulation is one compiled XLA program: a ``lax.while_loop`` whose
+body advances every PE and every Hoplite router by one cycle. All per-cycle
+updates are local to a PE row (the paper's "local graph memory"), which is
+what lets :mod:`repro.core.distributed` run the same body under ``shard_map``
+with ppermute torus hops.
+
+Timing model (faithful to §II):
+  * one packet ejected per PE per cycle, one packet injected per PE per cycle
+    (subject to NoC arbitration);
+  * ALU latency 1 cycle (single-stage pipelined DSP), folded into fire;
+  * scheduler select latency: 1 cycle for the in-order FIFO pop, 2 cycles for
+    the hierarchical OuterLOD/InnerLOD pick ("deterministic 2-cycle process");
+  * Hoplite: 1 cycle per hop, deflection on contention.
+
+Schedulers:
+  * ``inorder`` — ready nodes queue in a FIFO in arrival order (FCFS), the
+    baseline of prior TDP designs. FIFO depth = worst case (all local nodes).
+  * ``ooo``     — packed RDY bit-flags + hierarchical leading-one detect; with
+    criticality-ordered local memory, the pick is the most critical ready
+    node. (the paper's contribution)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitvec, noc
+from .graph import DIV_EPS, OP_ADD, OP_DIV, OP_MUL, OP_SUB
+from .partition import GraphMemory
+
+Shift = Callable[[dict], dict]
+
+
+def alu(opcode, a, b):
+    """Vectorized ALU — identical semantics to graph.apply_op (f32)."""
+    safe_b = b + jnp.where(b >= 0, jnp.float32(DIV_EPS), jnp.float32(-DIV_EPS))
+    return jnp.select(
+        [opcode == OP_ADD, opcode == OP_SUB, opcode == OP_MUL, opcode == OP_DIV],
+        [a + b, a - b, a * b, a / safe_b],
+        jnp.float32(0),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlayConfig:
+    """``select_latency`` models the scheduler pick cost in *exposed* cycles.
+
+    The paper's hierarchical LOD is a deterministic 2-cycle circuit — the
+    point of determinism is that the pick pipelines behind the (>=1 cycle)
+    fanout drain of the previous node, so its exposed cost equals the FIFO
+    pop's: 1 cycle. Default is therefore 1 for both schedulers; pass
+    ``select_latency=2`` to model an un-pipelined LOD (ablation), or a larger
+    value to model the naive non-deterministic memory scan the paper rejects.
+    """
+
+    scheduler: str = "ooo"           # "ooo" | "inorder"
+    select_latency: int | None = None  # exposed cycles; default 1
+    eject_capacity: int = 1          # 2 == paper §II-C BRAM multipumping
+    max_cycles: int = 1_000_000
+
+    @property
+    def sel_lat(self) -> int:
+        return 1 if self.select_latency is None else self.select_latency
+
+
+class DeviceGraph(dict):
+    """GraphMemory as jnp arrays reshaped to [nx, ny, ...]."""
+
+
+def device_graph(gm: GraphMemory) -> DeviceGraph:
+    nx, ny = gm.nx, gm.ny
+    r3 = lambda a: jnp.asarray(a).reshape(nx, ny, -1)
+    return DeviceGraph(
+        opcode=r3(gm.opcode).astype(jnp.int32),
+        fanin=r3(gm.fanin).astype(jnp.int32),
+        init_value=r3(gm.init_value),
+        fo_base=r3(gm.fo_base).astype(jnp.int32),
+        fo_count=r3(gm.fo_count).astype(jnp.int32),
+        valid=r3(gm.valid),
+        e_dst_pe=r3(gm.e_dst_pe).astype(jnp.int32),
+        e_dst_slot=r3(gm.e_dst_slot).astype(jnp.int32),
+        e_dst_opidx=r3(gm.e_dst_opidx).astype(jnp.int32),
+    )
+
+
+def _row_gather(arr, idx):
+    """arr: [nx, ny, L(, ...)], idx: [nx, ny] -> arr[x, y, idx[x, y]]."""
+    idxc = jnp.clip(idx, 0, arr.shape[2] - 1)
+    take = jnp.take_along_axis(arr, idxc.reshape(*idx.shape, 1, *(1,) * (arr.ndim - 3)), axis=2)
+    return take.reshape(idx.shape + arr.shape[3:])
+
+
+def init_state(g: DeviceGraph, cfg: OverlayConfig, fifo_depth: int):
+    nx, ny, L = g["opcode"].shape
+    W = L // bitvec.FLAGS_PER_WORD
+    is_input = (g["fanin"] == 0) & g["valid"]
+    has_fo = g["fo_count"] > 0
+    computed = is_input
+    value = jnp.where(is_input, g["init_value"], 0.0)
+
+    slots = jnp.arange(L, dtype=jnp.int32)
+    need_drain = is_input & has_fo  # inputs with fanouts are ready at cycle 0
+    # RDY bit image of need_drain.
+    bit = (jnp.uint32(1) << (31 - (slots % 32)).astype(jnp.uint32))
+    masks = jnp.where(need_drain, bit[None, None, :], jnp.uint32(0))
+    rdy = jnp.zeros((nx, ny, W), jnp.uint32)
+    rdy = rdy.at[:, :, :].set(
+        jax.lax.reduce(
+            masks.reshape(nx, ny, W, 32), jnp.uint32(0), jax.lax.bitwise_or, (3,)
+        )
+    )
+    # FIFO pre-loaded with ready inputs in ascending slot (== arrival) order.
+    order_key = jnp.where(need_drain, slots, L)
+    fifo_init = jnp.sort(order_key, axis=-1)[:, :, :fifo_depth]
+    fifo = jnp.where(fifo_init < L, fifo_init, -1).astype(jnp.int32)
+    fifo_size = need_drain.sum(axis=-1).astype(jnp.int32)
+
+    return dict(
+        pending=g["fanin"].astype(jnp.int32),
+        operands=jnp.zeros((nx, ny, L, 2), jnp.float32),
+        computed=computed,
+        value=value,
+        rdy=rdy if cfg.scheduler == "ooo" else jnp.zeros((nx, ny, W), jnp.uint32),
+        fifo=fifo if cfg.scheduler == "inorder" else jnp.full((nx, ny, 1), -1, jnp.int32),
+        fifo_head=jnp.zeros((nx, ny), jnp.int32),
+        fifo_size=fifo_size if cfg.scheduler == "inorder" else jnp.zeros((nx, ny), jnp.int32),
+        active=jnp.full((nx, ny), -1, jnp.int32),
+        cursor=jnp.zeros((nx, ny), jnp.int32),
+        cursor_end=jnp.zeros((nx, ny), jnp.int32),
+        sel_wait=jnp.full((nx, ny), cfg.sel_lat - 1, jnp.int32),
+        link_e=noc.empty_packets(nx, ny),
+        link_s=noc.empty_packets(nx, ny),
+        cycle=jnp.int32(0),
+        delivered=jnp.int32(0),
+        deflections=jnp.int32(0),
+        busy_cycles=jnp.int32(0),
+        done=jnp.bool_(False),
+    )
+
+
+def make_cycle_fn(
+    g: DeviceGraph,
+    cfg: OverlayConfig,
+    *,
+    shift_e: Shift = noc.roll_shift_e,
+    shift_s: Shift = noc.roll_shift_s,
+    all_reduce: Callable[[Any], Any] = lambda x: x,
+    x0=0,
+    y0=0,
+    global_ny: int | None = None,
+):
+    """Build the one-cycle transition function. ``all_reduce`` reduces scalar
+    termination predicates across shards (identity on a single device);
+    ``x0``/``y0``/``global_ny`` supply global router coordinates when the PE
+    grid is sharded (see core.distributed)."""
+    nx, ny, L = g["opcode"].shape
+    ny_i32 = jnp.int32(global_ny if global_ny is not None else ny)
+
+    def cycle(s):
+        # ---- 1. offer injection packet from the active node's fanout cursor
+        inj_valid = (s["active"] >= 0) & (s["cursor"] < s["cursor_end"])
+        dst_pe = _row_gather(g["e_dst_pe"], s["cursor"])
+        inject = dict(
+            valid=inj_valid,
+            dst_x=dst_pe // ny_i32,
+            dst_y=dst_pe % ny_i32,
+            dst_slot=_row_gather(g["e_dst_slot"], s["cursor"]),
+            opidx=_row_gather(g["e_dst_opidx"], s["cursor"]),
+            value=_row_gather(s["value"], s["active"]),
+        )
+
+        # ---- 2. NoC cycle
+        link_e, link_s, ejects, accepted = noc.router_cycle(
+            s["link_e"], s["link_s"], inject, shift_e=shift_e, shift_s=shift_s,
+            x0=x0, y0=y0, eject_capacity=cfg.eject_capacity,
+        )
+
+        # ---- 3. advance fanout cursor; retire drained nodes
+        cursor = s["cursor"] + accepted.astype(jnp.int32)
+        cursor_end = s["cursor_end"]
+        drained = (s["active"] >= 0) & (cursor >= cursor_end)
+        active = jnp.where(drained, -1, s["active"])
+        sel_wait = jnp.where(drained, cfg.sel_lat - 1, s["sel_wait"])
+
+        # ---- 4. apply ejected packets (eject_capacity per PE per cycle)
+        ix = jnp.arange(nx)[:, None] * jnp.ones((1, ny), jnp.int32)
+        iy = jnp.arange(ny)[None, :] * jnp.ones((nx, 1), jnp.int32)
+        pending, operands = s["pending"], s["operands"]
+        computed, value = s["computed"], s["value"]
+        rdy = s["rdy"]
+        fifo, fifo_head, fifo_size = s["fifo"], s["fifo_head"], s["fifo_size"]
+        n_delivered = jnp.int32(0)
+        n_fired = jnp.int32(0)
+
+        for eject in ejects:
+            ej_v = eject["valid"]
+            ej_slot = jnp.clip(eject["dst_slot"], 0, L - 1)
+            ej_op = jnp.clip(eject["opidx"], 0, 1)
+            old_opnd = operands[ix, iy, ej_slot, ej_op]
+            operands = operands.at[ix, iy, ej_slot, ej_op].set(
+                jnp.where(ej_v, eject["value"], old_opnd)
+            )
+            old_pend = pending[ix, iy, ej_slot]
+            new_pend = jnp.where(ej_v, old_pend - 1, old_pend)
+            pending = pending.at[ix, iy, ej_slot].set(new_pend)
+
+            was_done = computed[ix, iy, ej_slot]
+            fired = ej_v & (new_pend == 0) & ~was_done
+            a = operands[ix, iy, ej_slot, 0]
+            b = operands[ix, iy, ej_slot, 1]
+            opc = g["opcode"][ix, iy, ej_slot]
+            fval = alu(opc, a, b)
+            value = value.at[ix, iy, ej_slot].set(
+                jnp.where(fired, fval, value[ix, iy, ej_slot])
+            )
+            computed = computed.at[ix, iy, ej_slot].set(was_done | fired)
+
+            ready_new = fired & (g["fo_count"][ix, iy, ej_slot] > 0)
+            if cfg.scheduler == "ooo":
+                rdy = bitvec.set_bit(
+                    rdy.reshape(nx * ny, -1),
+                    (ix * ny + iy).reshape(-1),
+                    ej_slot.reshape(-1),
+                    ready_new.reshape(-1),
+                ).reshape(nx, ny, -1)
+            else:
+                depth = fifo.shape[-1]
+                tail = (fifo_head + fifo_size) % depth
+                old_f = fifo[ix, iy, tail]
+                fifo = fifo.at[ix, iy, tail].set(jnp.where(ready_new, ej_slot, old_f))
+                fifo_size = fifo_size + ready_new.astype(jnp.int32)
+            n_delivered = n_delivered + ej_v.sum().astype(jnp.int32)
+            n_fired = n_fired + fired.sum().astype(jnp.int32)
+
+        # ---- 5. scheduler: select the next node on idle PEs
+        idle = active < 0
+        if cfg.scheduler == "ooo":
+            cand = bitvec.leading_one(rdy)          # most critical ready slot
+            have = cand >= 0
+        else:
+            cand = _row_gather(fifo, fifo_head)
+            have = fifo_size > 0
+        can_wait = idle & have & (sel_wait > 0)
+        sel_wait = jnp.where(can_wait, sel_wait - 1, sel_wait)
+        sel = idle & have & (sel_wait == 0) & ~can_wait
+        if cfg.scheduler == "ooo":
+            # clear the selected bit
+            word, mask = bitvec.slot_word_mask(jnp.clip(cand, 0, L - 1))
+            row = rdy[ix, iy, word]
+            rdy = rdy.at[ix, iy, word].set(jnp.where(sel, row & ~mask, row))
+        else:
+            depth = fifo.shape[-1]
+            fifo_head = jnp.where(sel, (fifo_head + 1) % depth, fifo_head)
+            fifo_size = jnp.where(sel, fifo_size - 1, fifo_size)
+
+        active = jnp.where(sel, cand, active)
+        new_base = _row_gather(g["fo_base"], jnp.clip(cand, 0, L - 1))
+        new_cnt = _row_gather(g["fo_count"], jnp.clip(cand, 0, L - 1))
+        cursor = jnp.where(sel, new_base, cursor)
+        cursor_end = jnp.where(sel, new_base + new_cnt, cursor_end)
+
+        # ---- 6. termination + stats
+        all_computed = all_reduce((computed | ~g["valid"]).all())
+        no_ready = all_reduce((rdy == 0).all() & (fifo_size == 0).all())
+        no_active = all_reduce((active < 0).all())
+        links_idle = all_reduce(noc.links_empty(link_e, link_s))
+        done = all_computed & no_ready & no_active & links_idle
+
+        return dict(
+            pending=pending, operands=operands, computed=computed, value=value,
+            rdy=rdy, fifo=fifo, fifo_head=fifo_head, fifo_size=fifo_size,
+            active=active, cursor=cursor, cursor_end=cursor_end, sel_wait=sel_wait,
+            link_e=link_e, link_s=link_s,
+            cycle=s["cycle"] + 1,
+            delivered=s["delivered"] + all_reduce(n_delivered).astype(jnp.int32),
+            deflections=s["deflections"]
+            + all_reduce((inj_valid & ~accepted).sum()).astype(jnp.int32),
+            busy_cycles=s["busy_cycles"] + all_reduce(n_fired).astype(jnp.int32),
+            done=done,
+        )
+
+    return cycle
+
+
+@dataclasses.dataclass
+class SimResult:
+    cycles: int
+    done: bool
+    values: np.ndarray        # [N] node values in global id order
+    delivered: int
+    deflections: int
+    busy_cycles: int
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "fifo_depth", "nx", "ny"))
+def _run_jit(g: dict, cfg: OverlayConfig, fifo_depth: int, nx: int, ny: int):
+    state = init_state(g, cfg, fifo_depth)
+    cycle_fn = make_cycle_fn(g, cfg)
+
+    def cond(s):
+        return (~s["done"]) & (s["cycle"] < cfg.max_cycles)
+
+    final = jax.lax.while_loop(cond, cycle_fn, state)
+    return final
+
+
+def simulate(gm: GraphMemory, cfg: OverlayConfig | None = None) -> SimResult:
+    """Run the overlay to completion on a single device."""
+    cfg = cfg or OverlayConfig()
+    g = device_graph(gm)
+    fifo_depth = max(int(gm.local_counts.max(initial=1)), 1)
+    final = _run_jit(dict(g), cfg, fifo_depth, gm.nx, gm.ny)
+    value = np.asarray(final["value"]).reshape(gm.num_pes, gm.lmax)
+    values = value[gm.node_pe, gm.node_slot]
+    return SimResult(
+        cycles=int(final["cycle"]),
+        done=bool(final["done"]),
+        values=values,
+        delivered=int(final["delivered"]),
+        deflections=int(final["deflections"]),
+        busy_cycles=int(final["busy_cycles"]),
+    )

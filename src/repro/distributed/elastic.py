@@ -1,0 +1,36 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+Checkpoints are host arrays (manifest-based), so elasticity reduces to
+recomputing the PartitionSpecs for the NEW mesh and ``device_put``-ing the
+restored state. Data-parallel rescale keeps per-step semantics by holding
+the GLOBAL batch fixed: the pipeline reslices the same deterministic stream
+over the new host count (pipeline is a pure function of (seed, step, host)).
+
+Straggler/failure handling at 1000-node scale (documented policy, exercised
+by tests at container scale):
+  * failure -> the job restarts on the surviving mesh via ``remesh`` +
+    checkpoint auto-resume (launch.train does this end-to-end);
+  * stragglers -> deterministic data sharding means any host can recompute
+    any shard; slow hosts are replaced by restarting with the same host_id;
+  * the overlay's deflection-routed NoC (core.noc) is itself the paper's
+    straggler-mitigation story at the network level: contended packets
+    deflect rather than block.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed import sharding as shd
+
+
+def remesh(cfg, state, new_mesh):
+    """Re-shard a (host or device) state pytree onto ``new_mesh``."""
+    specs = shd.state_specs(cfg, state, new_mesh)
+    return jax.device_put(state, shd.to_shardings(new_mesh, specs))
+
+
+def rescale_batch(global_batch: int, old_hosts: int, new_hosts: int) -> int:
+    """Per-host batch after an elastic resize (global batch invariant)."""
+    if global_batch % new_hosts:
+        raise ValueError(f"global batch {global_batch} not divisible by {new_hosts} hosts")
+    return global_batch // new_hosts

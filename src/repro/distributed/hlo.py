@@ -1,0 +1,97 @@
+"""Optimized-HLO analysis: collective traffic extraction for the roofline.
+
+``cost_analysis()`` reports FLOPs and memory bytes but not collective bytes,
+so we parse the compiled module text. XLA prints operands as bare ``%names``;
+the *result* type carries the shape, and ``replica_groups=[G,S]<=[N]`` (or an
+explicit group list) carries the group size S. Per-device ICI traffic uses
+the ring-algorithm model:
+
+    all-reduce          2 * B * (S-1)/S      (reduce-scatter + all-gather)
+    all-gather          B * (S-1)/S          (B = full result bytes)
+    reduce-scatter      B * (S-1)            (B = shard result bytes)
+    all-to-all          B * (S-1)/S
+    collective-permute  B
+
+Async ``-start``/``-done`` pairs are counted once at the start op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_OP_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s+"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<async>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def _traffic(kind: str, result_bytes: int, s: int) -> float:
+    if s <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (s - 1) / s
+    if kind == "all-gather":
+        return result_bytes * (s - 1) / s
+    if kind == "reduce-scatter":
+        return result_bytes * (s - 1)
+    if kind == "all-to-all":
+        return result_bytes * (s - 1) / s
+    return float(result_bytes)  # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective stats from optimized HLO.
+
+    Returns {kind: {bytes, traffic_bytes, count}, total_bytes, total_traffic,
+    total_count}; ``bytes`` = raw result bytes, ``traffic_bytes`` = ring-model
+    ICI bytes per device (use this for the roofline collective term).
+    """
+    out: dict = defaultdict(lambda: {"bytes": 0, "traffic_bytes": 0.0, "count": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group("async") == "-done":
+            continue
+        kind = m.group("kind")
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group("result")))
+        s = _group_size(line)
+        out[kind]["bytes"] += nbytes
+        out[kind]["traffic_bytes"] += _traffic(kind, nbytes, s)
+        out[kind]["count"] += 1
+    result = {k: dict(v) for k, v in out.items()}
+    result["total_bytes"] = int(sum(v["bytes"] for v in out.values()))
+    result["total_traffic"] = float(sum(v["traffic_bytes"] for v in out.values()))
+    result["total_count"] = int(sum(v["count"] for v in out.values()))
+    return result

@@ -1,0 +1,344 @@
+"""Trip-count-aware static cost analysis of compiled HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, ignoring the trip
+count — useless for scan-over-layers models (it under-counts an 80-layer
+model by 80x). This walker parses the optimized module, recursively costs
+each computation, and multiplies while bodies by their
+``backend_config known_trip_count`` (scan always has one), giving:
+
+  * flops            — dots (2*M*N*K), elementwise, reductions
+  * bytes            — HBM traffic model: operand+result bytes of every
+                       non-fused top-level op (fusion internals are free)
+  * collectives      — ring-model ICI traffic per kind (see hlo.collective_bytes)
+
+All numbers are per-device (the module is the per-partition SPMD program).
+Unknown trip counts fall back to 1 and are reported in ``unknown_trips``.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+from .hlo import _DTYPE_BYTES, _traffic
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<type>.+?)\s+"
+    r"(?P<opcode>[a-z][\w\-]*)\((?P<rest>.*)$"
+)
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = {
+    "while": ("condition", "body"),
+    "fusion": ("calls",),
+    "call": ("to_apply",),
+    "conditional": (),  # handled specially (branch_computations)
+}
+_ATTR_COMP = re.compile(r"\b(condition|body|calls|to_apply)=%?([\w\.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "logistic", "sine", "cosine", "floor", "ceil", "round-nearest-afz",
+    "exponential-minus-one", "log-plus-one", "atan2", "remainder",
+    "select", "clamp", "compare", "and", "or", "xor", "not",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "convert", "popcnt", "count-leading-zeros",
+}
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id", "iota"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _nelem(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _result_elems(type_str) -> int:
+    return sum(_nelem(s) for _, s in _SHAPE_RE.findall(type_str))
+
+
+class Module:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[dict]] = {}
+        self.shapes: dict[str, str] = {}  # op name -> result type string
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hdr = _COMP_HDR.match(line.strip())
+            if hdr and line.strip().endswith("{"):
+                cur = hdr.group(1)
+                self.computations[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            op = {
+                "name": m.group("name"),
+                "type": m.group("type"),
+                "opcode": m.group("opcode"),
+                "line": line,
+            }
+            self.shapes[op["name"]] = op["type"]
+            # operand names: inside the parens up to depth-0 close
+            rest = m.group("rest")
+            depth, end = 0, len(rest)
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    if depth == 0:
+                        end = i
+                        break
+                    depth -= 1
+            op["operands"] = re.findall(r"%([\w\.\-]+)", rest[:end])
+            op["attrs"] = rest[end:]
+            self.computations[cur].append(op)
+        self.entry = next(
+            (c for c in self.computations if c.startswith("main")),
+            list(self.computations)[-1] if self.computations else None)
+        # find ENTRY properly
+        for ln in text.splitlines():
+            if ln.startswith("ENTRY"):
+                m = _COMP_HDR.match(ln.strip())
+                if m:
+                    self.entry = m.group(1)
+        self._memo: dict[tuple, dict] = {}
+        self.unknown_trips: list[str] = []
+
+    # ------------------------------------------------------------------
+    def _name_bytes(self, name: str) -> int:
+        t = self.shapes.get(name)
+        if not t:
+            return 0
+        return sum(_DTYPE_BYTES.get(d, 4) * _nelem(s)
+                   for d, s in _SHAPE_RE.findall(t))
+
+    def _operand_bytes(self, op) -> int:
+        return sum(self._name_bytes(o) for o in op["operands"])
+
+    def _result_bytes(self, op) -> int:
+        return sum(_DTYPE_BYTES.get(d, 4) * _nelem(s)
+                   for d, s in _SHAPE_RE.findall(op["type"]))
+
+    def _traffic_bytes(self, op) -> int:
+        """Physical HBM traffic model for one top-level op.
+
+        Slicing ops read only the slice, not the buffer: counting the full
+        operand would charge a scan body the whole stacked parameter array
+        every iteration (the XLA cost-analysis convention, wrong by a factor
+        of num_layers here).
+        """
+        oc = op["opcode"]
+        if oc in ("dynamic-slice", "gather"):
+            return 2 * self._result_bytes(op)            # read slice + write
+        if oc in ("dynamic-update-slice", "scatter"):
+            upd = self._name_bytes(op["operands"][1]) if len(op["operands"]) > 1 else 0
+            return 3 * upd                               # read+write slice region (+update read)
+        if oc == "fusion":
+            # parameters that are only sliced inside the fused computation
+            # contribute their sliced bytes, not the whole buffer.
+            total = self._result_bytes(op)
+            called = self._called(op)
+            reads = self._fusion_param_reads(called[0]) if called else {}
+            for idx, o in enumerate(op["operands"]):
+                full = self._name_bytes(o)
+                total += min(full, reads.get(idx, full))
+            return total
+        return self._operand_bytes(op) + self._result_bytes(op)
+
+    def _fusion_param_reads(self, comp: str) -> dict:
+        """param index -> bytes actually read inside a fused computation
+        (slice results for params consumed only by slicing ops)."""
+        if comp in getattr(self, "_param_reads_memo", {}):
+            return self._param_reads_memo[comp]
+        if not hasattr(self, "_param_reads_memo"):
+            self._param_reads_memo = {}
+        ops = self.computations.get(comp, [])
+        param_idx: dict[str, int] = {}
+        for op in ops:
+            if op["opcode"] == "parameter":
+                m = re.search(r"parameter\((\d+)\)", op["line"])
+                if m:
+                    param_idx[op["name"]] = int(m.group(1))
+        reads: dict[int, int] = {}
+        sliced_only: dict[int, bool] = {i: True for i in param_idx.values()}
+        for op in ops:
+            for o in op["operands"]:
+                if o in param_idx:
+                    i = param_idx[o]
+                    if op["opcode"] in ("dynamic-slice", "gather", "slice"):
+                        reads[i] = reads.get(i, 0) + self._result_bytes(op)
+                    else:
+                        sliced_only[i] = False
+        out = {}
+        for i, only in sliced_only.items():
+            if only and i in reads:
+                out[i] = reads[i]
+        self._param_reads_memo[comp] = out
+        return out
+
+    def _dot_flops(self, op) -> float:
+        out_elems = _result_elems(op["type"])
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op["line"])
+        k = 1
+        if m and op["operands"]:
+            lhs_t = self.shapes.get(op["operands"][0], "")
+            sh = _SHAPE_RE.search(lhs_t)
+            if sh:
+                dims = [int(x) for x in sh.group(2).split(",")] if sh.group(2) else []
+                for idx in (int(x) for x in m.group(1).split(",") if x):
+                    if idx < len(dims):
+                        k *= dims[idx]
+        return 2.0 * out_elems * k
+
+    def _called(self, op) -> list[str]:
+        out = [name for _, name in _ATTR_COMP.findall(op["attrs"])]
+        for names in _ATTR_BRANCHES.findall(op["attrs"]):
+            out.extend(n.strip().lstrip("%") for n in names.split(",") if n.strip())
+        return out
+
+    # ------------------------------------------------------------------
+    def profile(self) -> dict:
+        """Top traffic/flop contributors by op_name metadata (the jaxpr
+        source op), trip-count aware — the 'profiler' for §Perf iterations."""
+        agg: dict[str, dict] = defaultdict(lambda: {"bytes": 0.0, "flops": 0.0})
+
+        def walk(comp: str, mult: float, in_fusion: bool):
+            for op in self.computations.get(comp, []):
+                oc = op["opcode"]
+                m = re.search(r'op_name="([^"]+)"', op["line"])
+                tag = m.group(1).split(" ")[0] if m else oc
+                tag = re.sub(r"\[.*", "", tag)
+                if oc == "while":
+                    t = mult
+                    tm = _TRIP_RE.search(op["line"])
+                    t = mult * (int(tm.group(1)) if tm else 1)
+                    for c in self._called(op):
+                        walk(c, t, in_fusion)
+                elif oc == "fusion":
+                    for c in self._called(op):
+                        walk(c, mult, True)
+                    if not in_fusion:
+                        agg[tag]["bytes"] += self._traffic_bytes(op) * mult
+                elif oc in ("call", "conditional", "async-start", "custom-call"):
+                    for c in self._called(op):
+                        walk(c, mult, in_fusion)
+                else:
+                    if oc == "dot":
+                        agg[tag]["flops"] += self._dot_flops(op) * mult
+                    elif oc in _ELEMENTWISE:
+                        agg[tag]["flops"] += _result_elems(op["type"]) * mult
+                    if not in_fusion and oc not in _NO_TRAFFIC:
+                        agg[tag]["bytes"] += self._traffic_bytes(op) * mult
+
+        walk(self.entry, 1.0, False)
+        return dict(agg)
+
+    def cost(self, comp: str | None = None, in_fusion: bool = False) -> dict:
+        comp = comp or self.entry
+        key = (comp, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = {"flops": 0.0, "bytes": 0.0,
+                 "coll": defaultdict(lambda: {"bytes": 0.0, "traffic": 0.0, "count": 0})}
+        for op in self.computations.get(comp, []):
+            oc = op["opcode"]
+            if oc == "while":
+                called = self._called(op)
+                trip = 1
+                m = _TRIP_RE.search(op["line"])
+                if m:
+                    trip = int(m.group(1))
+                else:
+                    self.unknown_trips.append(f"{comp}/{op['name']}")
+                for c in called:
+                    sub = self.cost(c, in_fusion)
+                    _acc(total, sub, trip)
+                total["bytes"] += self._result_bytes(op)  # loop-carried io once
+            elif oc == "fusion":
+                for c in self._called(op):
+                    sub = self.cost(c, True)
+                    _acc(total, sub, 1)
+                if not in_fusion:
+                    total["bytes"] += self._traffic_bytes(op)
+            elif oc in ("call", "conditional", "async-start", "custom-call"):
+                subs = [self.cost(c, in_fusion) for c in self._called(op)]
+                if subs:
+                    if oc == "conditional":  # max over branches
+                        best = max(subs, key=lambda s: s["flops"] + s["bytes"])
+                        _acc(total, best, 1)
+                    else:
+                        for sub in subs:
+                            _acc(total, sub, 1)
+            elif any(op["opcode"].startswith(c) for c in _COLLECTIVES):
+                if op["opcode"].endswith("-done"):
+                    continue
+                kind = next(c for c in _COLLECTIVES if op["opcode"].startswith(c))
+                b = self._result_bytes(op)
+                s = _group_size(op["line"])
+                e = total["coll"][kind]
+                e["bytes"] += b
+                e["traffic"] += _traffic(kind, b, s)
+                e["count"] += 1
+                if not in_fusion:
+                    total["bytes"] += self._operand_bytes(op) + self._result_bytes(op)
+            else:
+                if oc == "dot":
+                    total["flops"] += self._dot_flops(op)
+                elif oc in ("reduce", "reduce-window"):
+                    total["flops"] += self._operand_bytes(op) / 4.0  # ~1 flop/elem
+                elif oc in _ELEMENTWISE:
+                    total["flops"] += _result_elems(op["type"])
+                if not in_fusion and oc not in _NO_TRAFFIC:
+                    total["bytes"] += self._traffic_bytes(op)
+        self._memo[key] = total
+        return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def _acc(total, sub, mult):
+    total["flops"] += sub["flops"] * mult
+    total["bytes"] += sub["bytes"] * mult
+    for k, v in sub["coll"].items():
+        e = total["coll"][k]
+        e["bytes"] += v["bytes"] * mult
+        e["traffic"] += v["traffic"] * mult
+        e["count"] += v["count"] * mult
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = Module(hlo_text)
+    c = mod.cost()
+    coll = {k: dict(v) for k, v in c["coll"].items()}
+    return {
+        "flops": c["flops"],
+        "bytes": c["bytes"],
+        "collectives": coll,
+        "collective_traffic": float(sum(v["traffic"] for v in coll.values())),
+        "collective_count": int(sum(v["count"] for v in coll.values())),
+        "unknown_trips": mod.unknown_trips[:20],
+    }

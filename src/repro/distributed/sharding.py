@@ -1,0 +1,188 @@
+"""Sharding rules: parameter/optimizer/activation/cache PartitionSpecs.
+
+Scheme (DESIGN.md §6): 2-D TP x DP on mesh axes ("data", "model") — plus a
+leading "pod" axis folded into the data-parallel group on multi-pod meshes.
+
+  * column-parallel weights  [d_in, d_out]   -> (fsdp, "model")
+  * row-parallel weights     [d_out, d_in']  -> ("model", fsdp)
+  * embeddings [V, d] vocab-parallel          -> ("model", fsdp)
+    (tied head embed.T => logits vocab-sharded over "model"; the chunked-xent
+    logsumexp reduction becomes the TP all-reduce)
+  * MoE experts [E, d, f] / [E, f, d]         -> E over "model" (EP),
+    d over fsdp — EP rides the TP combine all-reduce (see models/moe.py)
+  * small tensors (norms, biases, routers, conv, SSM scalars) replicate
+  * optimizer state mirrors params (ZeRO via fsdp axis)
+
+``fsdp`` is the "data" axis when cfg.fsdp else None (replicated).
+KV/SSM caches: batch over data for batched decode; **sequence over data** for
+long_500k (batch=1) — decode sequence parallelism; kv-heads over "model".
+Layer-stacked parameters get a leading None for the stack dim.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def fix_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axis size doesn't divide (explicit
+    in_shardings require exact divisibility; replication is the safe
+    fallback and is recorded in the dry-run report via the spec itself)."""
+    dims = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    fixed = []
+    for d, ax in zip(shape, dims):
+        n = _axis_size(mesh, ax)
+        fixed.append(ax if (n > 1 and d % n == 0) or n == 1 else None)
+    return P(*fixed)
+
+
+def _rule(path: str, ndim: int, cfg: ModelConfig):
+    """Trailing-dims PartitionSpec for a parameter path."""
+    f = "data" if cfg.fsdp else None
+    # --- MoE expert tensors (3D, expert-major) ---
+    if path.endswith("ffn/w_gate") or path.endswith("ffn/w_up"):
+        return ("model", f, None)
+    if path.endswith("ffn/w_down"):
+        return ("model", None, f)
+    if "router" in path:
+        return (None, None)
+    # --- embeddings / head ---
+    if path.endswith("embed"):
+        return ("model", f)
+    if path.endswith("lm_head"):
+        return (f, "model")
+    # --- MLA ---
+    if "w_dkv" in path:
+        return (f, None)
+    if "w_uk" in path or "w_uv" in path:
+        return (None, "model")
+    # --- column-parallel ---
+    for k in ("wq/w", "wk/w", "wv/w", "w_gate/w", "w_up/w", "in_proj/w"):
+        if path.endswith(k):
+            return (f, "model")
+    # --- row-parallel ---
+    for k in ("wo/w", "w_down/w", "out_proj/w"):
+        if path.endswith(k):
+            return ("model", f)
+    # --- biases on column-parallel outputs ---
+    for k in ("wq/b", "wk/b", "wv/b", "w_up/b"):
+        if path.endswith(k):
+            return ("model",)
+    # everything else (norms, conv, A_log, D, dt_bias, wo/b, w_down/b): replicate
+    return tuple(None for _ in range(ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params_tree, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec matching ``params_tree`` (arrays or
+    ShapeDtypeStructs)."""
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        rule = _rule(ps, leaf.ndim, cfg)
+        rule = tuple(rule)
+        if len(rule) < leaf.ndim:  # stacked layer dims -> leading None
+            rule = (None,) * (leaf.ndim - len(rule)) + rule
+        elif len(rule) > leaf.ndim:
+            rule = rule[-leaf.ndim:]
+        return fix_divisibility(P(*rule), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def state_specs(cfg: ModelConfig, state_tree, mesh: Mesh) -> Any:
+    """TrainState {params, opt{m,v,master,count}, step} -> specs. Optimizer
+    moments/master mirror the param specs."""
+    pspecs = param_specs(cfg, state_tree["params"], mesh)
+    out = {"params": pspecs, "step": P()}
+    opt = {}
+    for k in state_tree["opt"]:
+        if k == "count":
+            opt[k] = P()
+        else:
+            opt[k] = param_specs(cfg, state_tree["opt"][k], mesh)
+    out["opt"] = opt
+    return out
+
+
+def batch_specs(cfg: ModelConfig, batch_tree, mesh: Mesh) -> Any:
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return fix_divisibility(
+            P(dp, *([None] * (leaf.ndim - 1))), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh, *, seq_shard: bool) -> Any:
+    """KV/SSM/latent cache specs.
+
+    seq_shard=False (batched decode): batch dim over data, kv-heads over model.
+    seq_shard=True (long_500k, batch=1): sequence dim over data.
+    Cache leaves (after layer stacking): attn k/v [L, b, S, hkv, hd];
+    mla ckv [L, b, S, kvr], kr [L, b, S, dr]; ssm state [L, b, h, p, n],
+    conv [L, b, k-1, c].
+    """
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        if "state" in ps:  # [L, b, h, p, n]
+            s = P(None, None, "model", None, None) if seq_shard else P(None, dp, "model", None, None)
+        elif "conv" in ps:  # [L, b, k-1, c]
+            s = P(None, None, None, "model") if seq_shard else P(None, dp, None, "model")
+        elif ps.endswith("k") or ps.endswith("v"):  # [L, b, S, hkv, hd]
+            if seq_shard:
+                s = P(None, None, dp, "model", None)
+            else:
+                s = P(None, dp, None, "model", None)
+            # kv-head dim often < model size (GQA/MQA): fall back to head_dim
+            if leaf.shape[3] % _axis_size(mesh, "model") != 0 and leaf.shape[4] % _axis_size(mesh, "model") == 0:
+                s = P(s[0], s[1], s[2], None, "model")
+        elif "ckv" in ps or "kr" in ps:  # [L, b, S, r]
+            s = P(None, None, dp, None) if seq_shard else P(None, dp, None, None)
+        else:
+            s = P(*([None] * nd))
+        return fix_divisibility(s, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))

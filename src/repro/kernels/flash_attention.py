@@ -1,0 +1,122 @@
+"""Blockwise (flash) attention Pallas TPU kernel — the LM stack's hot spot.
+
+Online-softmax attention tiled for VMEM: the grid iterates KV blocks in the
+last (sequential on TPU) axis, carrying running max / normalizer / output
+accumulator in VMEM scratch, so the [Tq, Tkv] score matrix never exists in
+HBM. Supports GQA (q-head -> kv-head mapped in the BlockSpec index_map) and
+causal masking with ends-aligned q/kv (decode convention).
+
+Block shapes: (block_q x head_dim) q tiles and (block_k x head_dim) kv tiles;
+head_dim is padded to a 128-lane multiple by the wrapper, block_q/block_k are
+sublane multiples. f32 accumulation regardless of input dtype.
+
+The pure-jnp oracle is :func:`repro.kernels.ref.flash_attention_ref`; the
+portable (non-Pallas) blockwise implementation used by the model stack on
+any backend is :mod:`repro.models.attention`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, tq, tkv, nk):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+    bq = q_ref.shape[2]
+    bk = k_ref.shape[2]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [BQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                     # [BQ, BK]
+    # Mask = kv-padding (kpos >= real tkv) plus causal (ends-aligned).
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kpos < tkv
+    if causal:
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (tkv - tq)
+        valid = valid & (qpos >= kpos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # [BQ, 128] (col 0 used)
+    m_cur = jnp.max(s, axis=1, keepdims=True)             # [BQ, 1]
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])         # [BQ, 1]
+    p = jnp.exp(s - m_new[:, :1])                         # [BQ, BK]
+    l_new = l_scr[...][:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    acc_scr[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...][:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, scale: float | None = None,
+    block_q: int = 256, block_k: int = 256, interpret: bool = False,
+) -> jax.Array:
+    """q: [B, Hq, Tq, D], k/v: [B, Hkv, Tkv, D] -> [B, Hq, Tq, D]."""
+    b, hq, tq, d = q.shape
+    _, hkv, tkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    s = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    bq = min(block_q, tq)
+    bk = min(block_k, tkv)
+    dpad = -d % 128
+    qpad, kpad = -tq % bq, -tkv % bk
+    if dpad or qpad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, dpad)))
+    if dpad or kpad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, dpad)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, dpad)))
+    tq_p, tkv_p, d_p = tq + qpad, tkv + kpad, d + dpad
+    nq, nk = tq_p // bq, tkv_p // bk
+
+    # ``tq``/``tkv`` passed to the kernel are the REAL lengths: kv padding is
+    # rejected by the kpos bound, q padding is sliced off after the call.
+    kernel = functools.partial(_kernel, scale=s, causal=causal, tq=tq, tkv=tkv, nk=nk)
+
+    from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d_p), lambda bb, h, i, j: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d_p), lambda bb, h, i, j, rep=rep: (bb, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, d_p), lambda bb, h, i, j, rep=rep: (bb, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d_p), lambda bb, h, i, j: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tq_p, d_p), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :tq, :d]

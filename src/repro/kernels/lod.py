@@ -1,0 +1,119 @@
+"""Hierarchical leading-one detector as a Pallas TPU kernel (paper §II-B).
+
+The FPGA circuit is an OuterLOD over a 128b summary vector followed by an
+InnerLOD over the selected 32b word. On TPU the natural form is a fused
+two-level reduction that the VPU executes on (8, 128)-tiled uint32 lanes:
+
+  InnerLOD:  per word, clz via SWAR bit-smear + popcount (pure shifts/adds —
+             no clz instruction needed on the VPU);
+  OuterLOD:  per row, min-reduce of ``word_idx * 32 + clz`` keyed so the
+             first nonzero word wins (empty words get a +inf key).
+
+Block shape: rows of PEs are tiled by ``block_rows`` (sublane multiple of 8);
+the word axis is padded to a 128-lane multiple by the wrapper so one block is
+a whole number of VMEM tiles. The scheduler variant additionally clears the
+selected bit in the same pass (one VMEM round-trip per scheduling decision).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_U32 = jnp.uint32
+_BIG = 0x7FFFFFFF  # empty-word key (python int to avoid captured tracers)
+
+
+def _smear(w):
+    w = w | (w >> 1)
+    w = w | (w >> 2)
+    w = w | (w >> 4)
+    w = w | (w >> 8)
+    return w | (w >> 16)
+
+
+def _popcount(w):
+    w = w - ((w >> 1) & _U32(0x55555555))
+    w = (w & _U32(0x33333333)) + ((w >> 2) & _U32(0x33333333))
+    w = (w + (w >> 4)) & _U32(0x0F0F0F0F)
+    return ((w * _U32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _row_keys(bits):
+    """[BP, W] uint32 -> [BP, W] int32 priority keys (lower = more critical)."""
+    clz = 32 - _popcount(_smear(bits))
+    w_idx = jax.lax.broadcasted_iota(jnp.int32, bits.shape, dimension=1)
+    return jnp.where(bits != 0, w_idx * 32 + clz, _BIG)
+
+
+def _lod_kernel(bits_ref, out_ref):
+    keys = _row_keys(bits_ref[...])
+    best = jnp.min(keys, axis=1)
+    out_ref[...] = jnp.where(best == _BIG, jnp.int32(-1), best)
+
+
+def _schedule_kernel(bits_ref, slot_ref, newbits_ref):
+    bits = bits_ref[...]
+    keys = _row_keys(bits)
+    best = jnp.min(keys, axis=1)                      # [BP]
+    have = best != _BIG
+    slot = jnp.where(have, best, jnp.int32(-1))
+    slot_ref[...] = slot
+    # Clear the selected bit: mask applies only in the selected word.
+    s = jnp.where(have, best, 0)
+    word = (s // 32)[:, None]
+    w_idx = jax.lax.broadcasted_iota(jnp.int32, bits.shape, dimension=1)
+    mask = (_U32(1) << (31 - (s % 32)).astype(_U32))[:, None]
+    clear = (w_idx == word) & have[:, None]
+    newbits_ref[...] = jnp.where(clear, bits & ~mask, bits)
+
+
+def _pad(bits, block_rows):
+    p, w = bits.shape
+    pp = -p % block_rows
+    wp = -w % 128
+    if pp or wp:
+        bits = jnp.pad(bits, ((0, pp), (0, wp)))
+    return bits, p, w
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def lod(bits: jax.Array, *, block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """[P, W] uint32 -> [P] int32 leading ready slot (or -1)."""
+    padded, p, w = _pad(bits.astype(_U32), block_rows)
+    pp, wp = padded.shape
+    out = pl.pallas_call(
+        _lod_kernel,
+        grid=(pp // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, wp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.int32),
+        interpret=interpret,
+    )(padded)
+    return out[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def schedule_step(
+    bits: jax.Array, *, block_rows: int = 256, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Fused pick + clear: [P, W] -> (slot [P] int32, new bits [P, W])."""
+    padded, p, w = _pad(bits.astype(_U32), block_rows)
+    pp, wp = padded.shape
+    slot, newbits = pl.pallas_call(
+        _schedule_kernel,
+        grid=(pp // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, wp), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, wp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pp,), jnp.int32),
+            jax.ShapeDtypeStruct((pp, wp), _U32),
+        ],
+        interpret=interpret,
+    )(padded)
+    return slot[:p], newbits[:p, :w]

@@ -1,0 +1,35 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the TPU target the kernels compile natively; on this CPU container they
+run in ``interpret=True`` mode (the kernel body executed by the Pallas
+interpreter), which is how tests validate them against :mod:`.ref`.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import flash_attention as _fa
+from . import lod as _lod
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lod(bits, *, block_rows: int = 256):
+    """Hierarchical leading-one detect: [P, W] uint32 -> [P] int32 (-1 empty)."""
+    return _lod.lod(bits, block_rows=block_rows, interpret=_interpret())
+
+
+def schedule_step(bits, *, block_rows: int = 256):
+    """Fused OoO scheduler step: pick leading ready slot and clear its flag."""
+    return _lod.schedule_step(bits, block_rows=block_rows, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    block_q: int = 256, block_k: int = 256):
+    """Blockwise attention: q [B,Hq,Tq,D], k/v [B,Hkv,Tkv,D] -> [B,Hq,Tq,D]."""
+    return _fa.flash_attention(
+        q, k, v, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )

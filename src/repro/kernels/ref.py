@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; tests sweep shapes/dtypes and
+``assert_allclose`` the kernel (run with ``interpret=True`` on CPU) against
+these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+EMPTY = jnp.int32(-1)
+
+
+def lod_ref(bits: jax.Array) -> jax.Array:
+    """Hierarchical leading-one detect (paper §II-B), reference.
+
+    bits: [..., W] uint32, slot s lives at word s//32, bit (31 - s%32).
+    Returns [...] int32: index of the first set flag in (word, MSB-first)
+    order — with criticality-ordered memory this is the most critical ready
+    node — or -1 if empty.
+    """
+    nonzero = bits != 0
+    word_idx = jnp.argmax(nonzero, axis=-1).astype(jnp.int32)
+    sel = jnp.take_along_axis(bits, word_idx[..., None], axis=-1)[..., 0]
+    clz = jax.lax.clz(sel.astype(jnp.uint32)).astype(jnp.int32)
+    slot = word_idx * 32 + clz
+    return jnp.where(nonzero.any(axis=-1), slot, EMPTY)
+
+
+def popcount_ref(w: jax.Array) -> jax.Array:
+    return jax.lax.population_count(w.astype(_U32)).astype(jnp.int32)
+
+
+def schedule_step_ref(bits: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused scheduler step: pick the leading ready slot per row AND clear its
+    flag. bits: [P, W] uint32 -> (slot [P] int32, new_bits [P, W])."""
+    slot = lod_ref(bits)
+    have = slot >= 0
+    s = jnp.clip(slot, 0, bits.shape[-1] * 32 - 1)
+    word = s // 32
+    mask = (_U32(1) << (31 - (s % 32)).astype(_U32))
+    row = jnp.take_along_axis(bits, word[..., None], axis=-1)[..., 0]
+    cleared = jnp.where(have, row & ~mask, row)
+    new_bits = jnp.put_along_axis(bits, word[..., None], cleared[..., None], axis=-1, inplace=False)
+    return slot, new_bits
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    scale: float | None = None, kv_seg: jax.Array | None = None,
+) -> jax.Array:
+    """Exact attention oracle. q: [B, Hq, Tq, D], k/v: [B, Hkv, Tkv, D].
+
+    GQA: Hq must be a multiple of Hkv; kv heads are repeated. ``kv_seg``
+    optionally masks padded kv positions ([B, Tkv] bool, True == attend).
+    Causal masking aligns the *ends* of q and kv (decode convention).
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tkv, _ = k.shape
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * s
+    if causal:
+        qpos = jnp.arange(tq) + (tkv - tq)
+        mask = qpos[:, None] >= jnp.arange(tkv)[None, :]
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    if kv_seg is not None:
+        logits = jnp.where(kv_seg[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers, SPMD-
+partitions, and compiles on the production meshes, and extract the roofline
+terms from the compiled artifact.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first backend init. Only this entry point forces 512 host devices;
+tests and benchmarks see the real device list.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single multi --out experiments/dryrun
+
+One JSON record per cell is appended under <out>/; existing records are
+skipped, so the sweep is resumable.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.distributed.hlo import collective_bytes  # noqa: E402
+from repro.distributed.hlo_cost import analyze as hlo_analyze  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.models.common import ModelConfig  # noqa: E402
+from repro.optim import AdamW, wsd_schedule  # noqa: E402
+from repro.train import steps as tsteps  # noqa: E402
+
+# v5e-class chip constants for the roofline report (EXPERIMENTS.md §Roofline).
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (per-chip effective, 1 link)
+HBM_PER_CHIP = 16 * 1024**3
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def abstract_batch(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    s = SHAPES[shape_name]
+    b, t = s.global_batch, s.seq_len
+    if s.kind == "train":
+        if cfg.encdec is not None:
+            dec = max(64, t // cfg.encdec.dec_ratio)
+            return {"frames": sds((b, t, cfg.d_model), cfg.dtype),
+                    "tokens": sds((b, dec), "int32"),
+                    "labels": sds((b, dec), "int32")}
+        if cfg.family == "vlm":
+            return {"embeds": sds((b, t, cfg.d_model), cfg.dtype),
+                    "labels": sds((b, t), "int32")}
+        return {"tokens": sds((b, t), "int32"), "labels": sds((b, t), "int32")}
+    if s.kind == "prefill":
+        if cfg.encdec is not None:
+            dec = max(64, t // cfg.encdec.dec_ratio)
+            return {"frames": sds((b, t, cfg.d_model), cfg.dtype),
+                    "tokens": sds((b, dec), "int32")}
+        if cfg.family == "vlm":
+            return {"embeds": sds((b, t, cfg.d_model), cfg.dtype)}
+        return {"tokens": sds((b, t), "int32")}
+    # decode
+    return {"tokens": sds((b,), "int32")}
+
+
+def abstract_cache(cfg: ModelConfig, shape_name: str):
+    s = SHAPES[shape_name]
+    b, t = s.global_batch, s.seq_len
+    if cfg.encdec is not None:
+        dec = max(64, t // cfg.encdec.dec_ratio)
+        return jax.eval_shape(lambda: lm.encdec_init_cache(cfg, b, dec, t))
+    return jax.eval_shape(lambda: lm.init_cache(cfg, b, t))
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns (jitted_fn, example_args) for lower()."""
+    s = SHAPES[shape_name]
+    batch_abs = abstract_batch(cfg, shape_name)
+    bspecs = shd.batch_specs(cfg, batch_abs, mesh)
+    if s.kind == "train":
+        opt = AdamW(lr=wsd_schedule(3e-4, 1000, 100_000, 10_000))
+        state_abs = jax.eval_shape(
+            lambda k: tsteps.init_train_state(k, cfg, opt), jax.random.key(0))
+        sspecs = shd.state_specs(cfg, state_abs, mesh)
+        fn = tsteps.make_train_step(cfg, opt, grad_accum=cfg.grad_accum)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(shd.to_shardings(mesh, sspecs), shd.to_shardings(mesh, bspecs)),
+            out_shardings=(shd.to_shardings(mesh, sspecs), None),
+            donate_argnums=0,
+        )
+        return jfn, (state_abs, batch_abs)
+
+    params_abs = jax.eval_shape(lambda k: lm.init(k, cfg), jax.random.key(0))
+    pspecs = shd.param_specs(cfg, params_abs, mesh)
+    cache_abs = abstract_cache(cfg, shape_name)
+    cspecs = shd.cache_specs(cfg, cache_abs, mesh, seq_shard=(s.global_batch == 1))
+
+    if s.kind == "prefill":
+        fn = tsteps.make_prefill_step(cfg)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(shd.to_shardings(mesh, pspecs),
+                          shd.to_shardings(mesh, bspecs),
+                          shd.to_shardings(mesh, cspecs)),
+            out_shardings=(None, shd.to_shardings(mesh, cspecs)),
+            donate_argnums=2,
+        )
+        return jfn, (params_abs, abstract_batch(cfg, shape_name), cache_abs)
+
+    # decode: serve_step(params, tokens, cache, cache_len)
+    dstep = tsteps.make_decode_step(cfg)
+
+    def serve_step(params, tokens, cache, cache_len):
+        nxt, logits, cache = dstep(params, tokens, cache, cache_len)
+        return nxt, cache
+
+    tok_abs = abstract_batch(cfg, shape_name)["tokens"]
+    dp = shd.data_axes(mesh)
+    tok_spec = jax.sharding.PartitionSpec(dp) if s.global_batch > 1 else jax.sharding.PartitionSpec()
+    jfn = jax.jit(
+        serve_step,
+        in_shardings=(shd.to_shardings(mesh, pspecs),
+                      jax.sharding.NamedSharding(mesh, tok_spec),
+                      shd.to_shardings(mesh, cspecs),
+                      jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())),
+        out_shardings=(None, shd.to_shardings(mesh, cspecs)),
+        donate_argnums=2,
+    )
+    return jfn, (params_abs, tok_abs, cache_abs, sds((), "int32"))
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *, keep_hlo_dir=None,
+             cfg_override: ModelConfig | None = None, want_profile: bool = False):
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    ok, reason = shape_applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec.update(status="SKIP", reason=reason, wall_s=0.0)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    try:
+        jfn, args = build_cell(cfg, shape_name, mesh)
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis() or {}
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and np.isfinite(float(v))}
+        try:
+            ma = compiled.memory_analysis()
+            mem = {a: int(getattr(ma, a)) for a in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes") if hasattr(ma, a)}
+        except Exception as e:  # CPU backend may not implement this
+            mem = {"error": str(e)[:200]}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)          # raw, trip-count-blind (reference)
+        walk = hlo_analyze(hlo)               # trip-count-aware static analysis
+        if want_profile:
+            from repro.distributed.hlo_cost import Module  # noqa: PLC0415
+            prof = Module(hlo).profile()
+            rec["profile"] = dict(sorted(
+                prof.items(), key=lambda kv: -kv[1]["bytes"])[:25])
+        if keep_hlo_dir:
+            import gzip  # noqa: PLC0415
+            os.makedirs(keep_hlo_dir, exist_ok=True)
+            with gzip.open(os.path.join(
+                    keep_hlo_dir, f"{arch}__{shape_name}__{mesh_name}.hlo.gz"),
+                    "wt") as f:
+                f.write(hlo)
+        flops = walk["flops"]
+        bytes_acc = walk["bytes"]
+        kind = SHAPES[shape_name].kind
+        mf = 6 if kind == "train" else 2      # fwd+bwd vs fwd-only per token
+        model_flops = mf * lm.active_param_count(cfg) * _tokens(cfg, shape_name)
+        rec.update(
+            status="OK", chips=chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            cost=cost, memory=mem, collectives=coll, hlo_walk=walk,
+            roofline={
+                "compute_s": flops / PEAK_FLOPS,
+                "memory_s": bytes_acc / HBM_BW,
+                "collective_s": walk["collective_traffic"] / ICI_BW,
+                "model_flops_total": model_flops,
+                "useful_flops_frac": (model_flops / chips) / flops if flops else None,
+            },
+        )
+    except Exception as e:
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _tokens(cfg, shape_name):
+    s = SHAPES[shape_name]
+    if s.kind == "train":
+        if cfg.encdec is not None:
+            return s.global_batch * (s.seq_len + max(64, s.seq_len // cfg.encdec.dec_ratio))
+        return s.global_batch * s.seq_len
+    if s.kind == "prefill":
+        return s.global_batch * s.seq_len
+    return s.global_batch  # decode: one token per sequence
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="+", default=["all"])
+    ap.add_argument("--shape", nargs="+", default=["all"])
+    ap.add_argument("--mesh", nargs="+", default=["single"], choices=["single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == ["all"] else args.arch
+    shapes = list(SHAPES) if args.shape == ["all"] else args.shape
+    os.makedirs(args.out, exist_ok=True)
+
+    for mesh_name in args.mesh:
+        for arch in archs:
+            for shape_name in shapes:
+                path = os.path.join(args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"skip (exists): {path}")
+                    continue
+                print(f"=== {arch} x {shape_name} x {mesh_name} ===", flush=True)
+                rec = run_cell(arch, shape_name, mesh_name,
+                               keep_hlo_dir=os.path.join(args.out, "hlo") if args.keep_hlo else None)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    r = rec["roofline"]
+                    extra = (f" compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                             f"coll={r['collective_s']:.4f}s")
+                elif status == "FAIL":
+                    extra = " " + rec["error"][:160]
+                print(f"--- {status} ({rec['wall_s']}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

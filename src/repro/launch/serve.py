@@ -1,0 +1,75 @@
+"""Batched serving driver: prefill a prompt batch, decode N tokens, report
+throughput. Works with every registry arch (enc-dec and VLM included).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+      --batch 8 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = lm.init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    b, p, gen = args.batch, args.prompt_len, args.gen
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    if cfg.encdec is not None:
+        batch = {
+            "frames": jnp.asarray(rng.standard_normal((b, p * 2, cfg.d_model)), cfg.jdtype),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, p)), jnp.int32),
+        }
+        cache = lm.encdec_init_cache(cfg, b, max_dec_len=p + gen, enc_len=p * 2)
+    elif cfg.family == "vlm":
+        batch = {"embeds": jnp.asarray(rng.standard_normal((b, p, cfg.d_model)), cfg.jdtype)}
+        cache = lm.init_cache(cfg, b, max_len=p + gen)
+    else:
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, p)), jnp.int32)}
+        cache = lm.init_cache(cfg, b, max_len=p + gen)
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [cur]
+    t0 = time.time()
+    for i in range(gen - 1):
+        cur, _, cache = decode(params, cur, cache, jnp.int32(p + i))
+        outs.append(cur)
+    jax.block_until_ready(cur)
+    t_decode = time.time() - t0
+    seq = np.asarray(jnp.stack(outs, 1))
+
+    print(f"arch={cfg.name} batch={b} prompt={p} gen={gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms  ({b*p/t_prefill:,.0f} tok/s)")
+    print(f"decode:  {t_decode*1e3:.1f} ms   ({b*(gen-1)/max(t_decode,1e-9):,.0f} tok/s)")
+    print("sample tokens:", seq[0, :12].tolist())
+    return seq
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Portable blockwise (flash) attention in pure jnp.
+
+This is the model stack's attention on every backend: online-softmax over KV
+chunks, so the [Tq, Tkv] score matrix never materializes — O(cq * ck) live
+scores per step. On TPU the Pallas kernel (:mod:`repro.kernels.flash_attention`)
+is the drop-in hot-spot replacement; this implementation is also its
+semantic twin and lowers under pjit/SPMD for the multi-pod dry-run.
+
+Layout: q [B, Tq, Hq, D], k/v [B, Tkv, Hkv, D] (token-major, GQA by head
+grouping — KV heads are never materialized ``rep`` times). Causal masking is
+ends-aligned (decode convention); ``kv_len`` optionally bounds valid cache
+positions per batch row. The causal inner loop has a *dynamic* trip count
+(``fori_loop`` up to the diagonal chunk), so no FLOPs are spent on fully
+masked blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def blockwise_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, scale: float | None = None,
+    q_chunk: int = 512, kv_chunk: int = 1024,
+    kv_len: jax.Array | None = None,
+    differentiable: bool = False,
+) -> jax.Array:
+    """Returns [B, Tq, Hq, D] attention output (dtype of q, f32 accumulation).
+
+    kv_len: optional [] or [B] int32 — number of valid kv positions (cache
+    fill level). Defaults to Tkv. Causal alignment: the last q token attends
+    up to kv position ``kv_len - 1``.
+
+    differentiable=True (training): the q-chunk loop is Python-unrolled and
+    each chunk scans a *statically bounded* number of KV chunks (reverse-mode
+    safe, still no FLOPs on fully-masked causal blocks). False (inference):
+    rolled ``lax.map`` over q chunks with a dynamic-trip-count inner loop.
+    """
+    b, tq, hq, d = q.shape
+    _, tkv, hkv, _ = k.shape
+    assert hq % hkv == 0
+    rep = hq // hkv
+    s = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    if kv_len is None:
+        kv_len_b = jnp.full((b,), tkv, jnp.int32)
+    else:
+        kv_len_b = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+
+    cq = min(q_chunk, tq)
+    ck = min(kv_chunk, tkv)
+    qpad = -tq % cq
+    kpad = -tkv % ck
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    tq_p, tkv_p = tq + qpad, tkv + kpad
+    nq, nk = tq_p // cq, tkv_p // ck
+
+    # [B, Tkv, Hkv, D] -> [B, Hkv, Tkv, D] once (contiguous chunk slices).
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    qT = q.transpose(0, 2, 1, 3).reshape(b, hkv, rep, tq_p, d)
+
+    offset = kv_len_b - tq  # ends-aligned causal offset, [B]
+
+    def q_block(iq, qc):
+        # qc: [B, Hkv, rep, cq, D]
+        qpos = iq * cq + jnp.arange(cq, dtype=jnp.int32)            # [cq]
+        qpos_b = qpos[None, :] + offset[:, None]                     # [B, cq]
+
+        def kv_step(jk, carry):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(kT, jk * ck, ck, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vT, jk * ck, ck, axis=2)
+            sc = jnp.einsum(
+                "bgrqd,bgkd->bgrqk", qc.astype(jnp.float32),
+                kc.astype(jnp.float32), preferred_element_type=jnp.float32,
+            ) * s                                                    # [B,G,R,cq,ck]
+            kpos = jk * ck + jnp.arange(ck, dtype=jnp.int32)         # [ck]
+            valid = kpos[None, :] < kv_len_b[:, None]                # [B, ck]
+            mask = valid[:, None, :]                                 # [B, 1, ck]
+            if causal:
+                mask = mask & (qpos_b[:, :, None] >= kpos[None, None, :])
+            sc = jnp.where(mask[:, None, None, :, :], sc, NEG)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, vc.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((b, hkv, rep, cq), NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, rep, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, rep, cq, d), jnp.float32)
+        if n_static is not None:
+            def scan_step(carry, jk):
+                return kv_step(jk, carry), None
+            (m, l, acc), _ = jax.lax.scan(
+                scan_step, (m0, l0, a0), jnp.arange(n_static, dtype=jnp.int32))
+        elif causal:
+            # Last kv chunk this q block can see (dynamic trip count).
+            hi_pos = (iq + 1) * cq - 1 + jnp.max(offset)
+            n_need = jnp.clip(hi_pos // ck + 1, 0, nk)
+            m, l, acc = jax.lax.fori_loop(0, n_need, kv_step, (m0, l0, a0))
+        else:
+            m, l, acc = jax.lax.fori_loop(0, nk, kv_step, (m0, l0, a0))
+        return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+
+    if differentiable:
+        # Python-unrolled q loop; static per-chunk kv bound (reverse-mode safe).
+        qs = qT.reshape(b, hkv, rep, nq, cq, d)
+        outs = []
+        import math as _math
+        # static upper bound on offset: kv_len <= tkv
+        for i in range(nq):
+            if causal:
+                n_static = min(nk, _math.ceil(((i + 1) * cq + (tkv - tq)) / ck))
+                n_static = max(n_static, 1)
+            else:
+                n_static = nk
+            outs.append(q_block(jnp.int32(i), qs[:, :, :, i]))
+        out = jnp.stack(outs, axis=3)                                # [B,G,R,nq,cq,D]
+        out = out.reshape(b, hkv, rep, tq_p, d)
+    elif nq == 1:
+        n_static = None
+        out = q_block(jnp.int32(0), qT)                              # [B,G,R,cq,D]
+    else:
+        n_static = None
+        qs = qT.reshape(b, hkv, rep, nq, cq, d).transpose(3, 0, 1, 2, 4, 5)
+        out = jax.lax.map(lambda args: q_block(args[0], args[1]),
+                          (jnp.arange(nq, dtype=jnp.int32), qs))
+        out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, rep, tq_p, d)
+    out = out.reshape(b, hq, tq_p, d)
+    return out.transpose(0, 2, 1, 3)[:, :tq]

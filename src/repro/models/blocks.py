@@ -1,0 +1,258 @@
+"""Transformer / hybrid block assembly.
+
+Block kinds (cfg.block_kind): "attn" (attention or MLA + dense FFN),
+"moe" (attention/MLA + MoE FFN), "mamba" (Mamba2), "shared_attn" (hybrid:
+one shared attention+FFN block applied at intervals — Zamba2). Whisper's
+encoder/decoder blocks live here too.
+
+Every block has a uniform signature:
+    apply(params, cfg, h, aux) -> (h, extras)
+aux = {mode: train|prefill|decode, positions, cache (layer's entry or None),
+cache_len, enc_out (whisper)}; extras = {cache: new entry} | {metrics...}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .attention import blockwise_attention
+from .common import (
+    ModelConfig, act_fn, apply_mrope, apply_rope, dense_init, layernorm, rmsnorm,
+)
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+def norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"w": jnp.ones((d,), cfg.jdtype)}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((d,), cfg.jdtype)
+    return p
+
+
+def apply_norm(params, cfg, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, params["w"], params.get("b"), cfg.norm_eps)
+    return rmsnorm(x, params["w"], cfg.norm_eps)
+
+
+def mlp_init(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_glu:
+        return {
+            "w_gate": {"w": dense_init(ks[0], (d, f), cfg.jdtype)},
+            "w_up": {"w": dense_init(ks[1], (d, f), cfg.jdtype)},
+            "w_down": {"w": dense_init(ks[2], (f, d), cfg.jdtype)},
+        }
+    p = {
+        "w_up": {"w": dense_init(ks[0], (d, f), cfg.jdtype)},
+        "w_down": {"w": dense_init(ks[1], (f, d), cfg.jdtype)},
+    }
+    if cfg.proj_bias:
+        p["w_up"]["b"] = jnp.zeros((f,), cfg.jdtype)
+        p["w_down"]["b"] = jnp.zeros((d,), cfg.jdtype)
+    return p
+
+
+def mlp_apply(params, cfg, x):
+    act = act_fn(cfg.act)
+    if cfg.mlp_glu:
+        h = act(x @ params["w_gate"]["w"]) * (x @ params["w_up"]["w"])
+        return h @ params["w_down"]["w"]
+    h = x @ params["w_up"]["w"]
+    if "b" in params["w_up"]:
+        h = h + params["w_up"]["b"]
+    h = act(h)
+    h = h @ params["w_down"]["w"]
+    if "b" in params["w_down"]:
+        h = h + params["w_down"]["b"]
+    return h
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA/MQA/MHA) with KV cache
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": {"w": dense_init(ks[0], (d, h * hd), cfg.jdtype)},
+        "wk": {"w": dense_init(ks[1], (d, hkv * hd), cfg.jdtype)},
+        "wv": {"w": dense_init(ks[2], (d, hkv * hd), cfg.jdtype)},
+        "wo": {"w": dense_init(ks[3], (h * hd, d), cfg.jdtype)},
+    }
+    if cfg.qkv_bias:
+        p["wq"]["b"] = jnp.zeros((h * hd,), cfg.jdtype)
+        p["wk"]["b"] = jnp.zeros((hkv * hd,), cfg.jdtype)
+        p["wv"]["b"] = jnp.zeros((hkv * hd,), cfg.jdtype)
+    if cfg.proj_bias:
+        p["wo"]["b"] = jnp.zeros((d,), cfg.jdtype)
+    return p
+
+
+def _proj(p, x):
+    y = x @ p["w"]
+    return y + p["b"] if "b" in p else y
+
+
+def _pos_embed_qk(cfg, q, k, positions):
+    # q/k: [b, t, H, hd]; positions: [b, t] or [b, 3, t] for mrope
+    if cfg.pos == "rope":
+        q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = apply_mrope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    return q, k
+
+
+def attn_apply(params, cfg, x, aux, *, causal=True, kv_override=None):
+    """Unified attention: train (no cache), prefill (fills cache), decode
+    (single token against cache), cross (kv_override = encoder states)."""
+    b, t, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    mode = aux["mode"]
+    q = _proj(params["wq"], x).reshape(b, t, h, hd)
+
+    if kv_override is not None:  # cross-attention (whisper decoder)
+        xs = kv_override
+        k = _proj(params["wk"], xs).reshape(b, xs.shape[1], hkv, hd)
+        v = _proj(params["wv"], xs).reshape(b, xs.shape[1], hkv, hd)
+        out = blockwise_attention(q, k, v, causal=False,
+                                  q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+        extras = {}
+    else:
+        k = _proj(params["wk"], x).reshape(b, t, hkv, hd)
+        v = _proj(params["wv"], x).reshape(b, t, hkv, hd)
+        if cfg.pos in ("rope", "mrope"):
+            q, k = _pos_embed_qk(cfg, q, k, aux["positions"])
+        if mode == "train":
+            out = blockwise_attention(q, k, v, causal=causal,
+                                      q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                                      differentiable=True)
+            extras = {}
+        elif mode == "prefill":
+            cache = aux["cache"]
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            out = blockwise_attention(q, k, v, causal=causal,
+                                      q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+            extras = {"cache": {"k": ck, "v": cv}}
+        else:  # decode
+            cache = aux["cache"]
+            clen = aux["cache_len"]
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), clen, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), clen, axis=1)
+            out = blockwise_attention(q, ck, cv, causal=causal,
+                                      q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                                      kv_len=clen + 1)
+            extras = {"cache": {"k": ck, "v": cv}}
+    out = out.reshape(b, t, h * hd) @ params["wo"]["w"]
+    if "b" in params["wo"]:
+        out = out + params["wo"]["b"]
+    return out, extras
+
+
+def attn_cache_init(cfg, batch, max_len):
+    hkv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, hkv, hd), cfg.jdtype),
+        "v": jnp.zeros((batch, max_len, hkv, hd), cfg.jdtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Full blocks
+# --------------------------------------------------------------------------
+
+def block_init(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"ln1": norm_init(cfg), "mamba": ssm_mod.init(ks[0], cfg)}
+    p = {"ln1": norm_init(cfg)}
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.init(ks[0], cfg)
+    else:
+        p["attn"] = attn_init(ks[0], cfg)
+    p["ln2"] = norm_init(cfg)
+    if kind == "moe":
+        p["ffn"] = moe_mod.init(ks[1], cfg)
+    else:
+        p["ffn"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def block_apply(params, cfg, h, aux, kind: str):
+    extras = {}
+    if kind == "mamba":
+        x = apply_norm(params["ln1"], cfg, h)
+        if aux["mode"] == "decode":
+            y, new_cache = ssm_mod.apply_decode(params["mamba"], cfg, x, aux["cache"])
+            extras["cache"] = new_cache
+        else:
+            y = ssm_mod.apply_seq(params["mamba"], cfg, x)
+            if aux["mode"] == "prefill":
+                # Prefill for SSM: recompute final state for the cache.
+                extras["cache"] = ssm_prefill_cache(params["mamba"], cfg, x)
+        return h + y, extras
+
+    x = apply_norm(params["ln1"], cfg, h)
+    if cfg.mla is not None:
+        if aux["mode"] == "train":
+            y = mla_mod.apply_seq(params["attn"], cfg, x, aux["positions"],
+                                  differentiable=True)
+        elif aux["mode"] == "prefill":
+            y, latent = mla_mod.apply_seq(params["attn"], cfg, x, aux["positions"], return_cache=True)
+            cache = aux["cache"]
+            ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], latent["ckv"].astype(cache["ckv"].dtype), 0, axis=1)
+            kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], latent["kr"].astype(cache["kr"].dtype), 0, axis=1)
+            extras["cache"] = {"ckv": ckv, "kr": kr}
+        else:
+            y, new_cache = mla_mod.apply_decode(params["attn"], cfg, x, aux["cache"], aux["cache_len"])
+            extras["cache"] = new_cache
+    else:
+        y, a_extras = attn_apply(params["attn"], cfg, x, aux)
+        extras.update(a_extras)
+    h = h + y
+
+    x = apply_norm(params["ln2"], cfg, h)
+    if kind == "moe":
+        y, metrics = moe_mod.apply(params["ffn"], cfg, x)
+        extras["metrics"] = metrics
+    else:
+        y = mlp_apply(params["ffn"], cfg, x)
+    return h + y, extras
+
+
+def ssm_prefill_cache(mamba_params, cfg, x):
+    """Compute the post-sequence SSM state + conv tail for decode."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = ssm_mod.dims(cfg)
+    zxbcdt = x @ mamba_params["in_proj"]["w"]
+    z, xraw, Braw, Craw, dt = ssm_mod._split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xraw, Braw, Craw], axis=-1)
+    conv_out = jax.nn.silu(ssm_mod._conv1d(conv_in, mamba_params["conv"]["w"], mamba_params["conv"]["b"]))
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+    bsz, t, _ = x.shape
+    xh = xs.reshape(bsz, t, nheads, s.head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + mamba_params["dt_bias"])
+    A = -jnp.exp(mamba_params["A_log"])
+    _, final_state = ssm_mod.ssd_scan(xh, dtp, A, B, C, s.chunk)
+    conv_tail = conv_in[:, -(s.d_conv - 1):, :].astype(jnp.float32)
+    return {"state": final_state, "conv": conv_tail}
+
+
+def block_cache_init(cfg, kind: str, batch: int, max_len: int):
+    if kind == "mamba":
+        return ssm_mod.init_cache(cfg, batch)
+    if cfg.mla is not None:
+        return mla_mod.init_cache(cfg, batch, max_len)
+    return attn_cache_init(cfg, batch, max_len)

@@ -1,0 +1,224 @@
+"""Model config schema, parameter init helpers, norms, activations, RoPE.
+
+No flax on the box — parameters are nested dicts of jnp arrays, modules are
+(init, apply) function pairs. Everything is deliberately explicit so the
+sharding rules in :mod:`repro.distributed.sharding` can pattern-match on
+parameter paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Config schema
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0          # always-on shared experts (DeepSeek)
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0  # leading layers use a dense FFN (DeepSeek)
+    # capacity-cut policy: "criticality" keeps the highest-router-weight
+    # assignments per expert (the paper's criticality-ordered scheduling,
+    # token->expert edition); "arrival" is FCFS token order (the in-order
+    # baseline). Ablation in tests/test_moe.py.
+    dispatch_order: str = "criticality"
+    # Pin the dispatch tensor's expert dim to the model axis. Fixes a 16x
+    # dispatch-traffic replication (see EXPERIMENTS §Perf B1) but provokes an
+    # SPMD reshard-matmul of equal cost on this XLA version — net neutral,
+    # default off; also trips a jax-0.8 batched-gather transpose bug under
+    # grad, so only ever enabled for serve paths.
+    ep_constraint: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    q_lora_rank: int = 0         # 0 == full-rank queries (V2-Lite)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128             # SSD chunk length
+    compute_dtype: str = "float32"  # SSD einsum operand dtype (bf16 = §Perf)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecCfg:
+    enc_layers: int
+    dec_ratio: int = 8           # decoder len = seq_len // dec_ratio (shapes)
+    frontend: str = "stub"       # conv frontend stubbed: input = frame embeds
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | vlm | audio | ssm | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    act: str = "silu"            # silu (SwiGLU) | gelu (GeGLU)
+    qkv_bias: bool = False
+    proj_bias: bool = False      # biases on out-proj and MLP (whisper)
+    mlp_glu: bool = True         # gated MLP; False = plain 2-matrix MLP
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    rope_theta: float = 10_000.0
+    pos: str = "rope"            # rope | mrope | sinusoid | none
+    tie_embeddings: bool = False
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    ssm: Optional[SSMCfg] = None
+    encdec: Optional[EncDecCfg] = None
+    attn_every: int = 0          # hybrid: shared attn block every k layers
+    dtype: str = "bfloat16"
+    remat: bool = True
+    attn_chunk: int = 1024       # blockwise attention kv-chunk length
+    loss_chunk: int = 2048       # chunked cross-entropy sequence chunk
+    scan_layers: bool = True
+    fsdp: bool = False           # shard params+opt over the data axis too
+    grad_accum: int = 1          # microbatch accumulation in train_step
+    vocab_pad_to: int = 256      # embedding tables padded for TP divisibility
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m if m else self.vocab_size
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k: per-token decode state is O(1) or O(rank)."""
+        return self.ssm is not None or self.mla is not None
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def block_kind(self, i: int) -> str:
+        """Block type of layer i: attn | moe | mamba | shared_attn."""
+        if self.ssm is not None and self.attn_every == 0:
+            return "mamba"
+        if self.ssm is not None:
+            return "shared_attn" if (i + 1) % self.attn_every == 0 else "mamba"
+        if self.moe is not None:
+            return "attn" if i < self.moe.first_dense_layers else "moe"
+        return "attn"
+
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms / activations
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps):
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, weight, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (RoPE / M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, H, T, D], positions: [B, T] int32 -> rotated x."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))                 # [D/2]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,T,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+MROPE_SECTIONS = (16, 24, 24)  # qwen2-vl: (temporal, height, width) freq split
+
+
+def apply_mrope(x, positions3, theta: float, sections=MROPE_SECTIONS):
+    """Multimodal RoPE: positions3 [B, 3, T] (t/h/w ids). For text tokens the
+    three ids are equal and M-RoPE reduces numerically to 1-D RoPE."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.asarray(rope_freqs(d, theta))                 # [half]
+    # Each frequency channel is driven by one of the three position streams.
+    sec = np.zeros(half, dtype=np.int32)
+    bounds = np.cumsum(sections)
+    for i in range(half):
+        sec[i] = int(np.searchsorted(bounds, i % bounds[-1], side="right"))
+    sec = jnp.asarray(np.minimum(sec, 2))
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                       # [B, 3, T]
+        jnp.broadcast_to(sec[None, :, None], (positions3.shape[0], half, 1)).astype(jnp.int32) * 0
+        + sec[None, :, None].astype(jnp.int32),
+        axis=1,
+    )  # -> [B, half, T]
+    ang = pos.transpose(0, 2, 1)[:, None, :, :] * freqs        # [B,1,T,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(t: int, d: int, offset: int = 0):
+    pos = np.arange(offset, offset + t, dtype=np.float32)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, d, 2, dtype=np.float32) / d)
+    pe = np.zeros((t, d), dtype=np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe)

@@ -1,0 +1,362 @@
+"""Full language models: embedding -> scanned block stack -> norm -> head.
+
+Layers are grouped into *segments* of consecutive identical block kinds
+(dense runs, MoE runs, Mamba runs between shared-attention applications);
+each segment's parameters are stacked on a leading axis and executed with
+``lax.scan`` (+ per-layer ``jax.checkpoint`` when cfg.remat) so the HLO stays
+small for 80-layer x 512-device compiles and activation memory stays at
+O(num_checkpoints).
+
+Zamba2-style hybrids share ONE attention block's parameters across all its
+application points (cfg.attn_every); each application point still owns its
+own KV-cache entry. Whisper is encoder-decoder: encoder = non-causal blocks
+over stub frame embeddings, decoder = causal self-attention + cross-attention
+with a precomputed encoder K/V cache.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as B
+from .common import ModelConfig, embed_init, sinusoid_positions
+
+
+# --------------------------------------------------------------------------
+# Segments
+# --------------------------------------------------------------------------
+
+def segments(cfg: ModelConfig) -> list[tuple[str, int]]:
+    kinds = [cfg.block_kind(i) for i in range(cfg.num_layers)]
+    return [(k, len(list(g))) for k, g in itertools.groupby(kinds)]
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    params = {"embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), cfg.jdtype)}
+    segs = segments(cfg)
+    seg_params = []
+    lkeys = jax.random.split(ks[1], sum(n for _, n in segs) + 1)
+    li = 0
+    shared_made = False
+    for kind, n in segs:
+        if kind == "shared_attn":
+            if not shared_made:
+                params["shared_attn"] = B.block_init(ks[2], cfg, "attn")
+                shared_made = True
+            seg_params.append(None)  # parameters live in params["shared_attn"]
+            li += n
+        else:
+            seg_params.append(_stack([B.block_init(lkeys[li + i], cfg, kind) for i in range(n)]))
+            li += n
+    params["segments"] = seg_params
+    params["final_norm"] = B.norm_init(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[3], (cfg.d_model, cfg.padded_vocab), cfg.jdtype)
+    if cfg.encdec is not None:
+        enc_keys = jax.random.split(ks[4], cfg.encdec.enc_layers)
+        params["encoder"] = {
+            "blocks": _stack([B.block_init(k, cfg, "attn") for k in enc_keys]),
+            "final_norm": B.norm_init(cfg),
+        }
+        xk = jax.random.split(ks[5], cfg.num_layers)
+        params["cross_attn"] = _stack(
+            [{"ln": B.norm_init(cfg), "attn": B.attn_init(k, cfg)} for k in xk]
+        )
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init(k, cfg), jax.random.key(0))
+    import numpy as np
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top_k + shared experts only)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_moe = sum(1 for i in range(cfg.num_layers) if cfg.block_kind(i) == "moe")
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    inactive = n_moe * (m.num_experts - m.top_k) * per_expert
+    return int(total - inactive)
+
+
+# --------------------------------------------------------------------------
+# Positions
+# --------------------------------------------------------------------------
+
+def make_positions(cfg, b, t, offset=0):
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None] + offset, (b, t))
+    if cfg.pos == "mrope":
+        return jnp.broadcast_to(pos[:, None, :], (b, 3, t))  # text: t==h==w ids
+    return pos
+
+
+# --------------------------------------------------------------------------
+# Stack execution
+# --------------------------------------------------------------------------
+
+def _run_segment(seg_p, cfg, kind, h, aux, seg_cache):
+    """Scan one segment. seg_cache: stacked per-layer cache or None."""
+    mode = aux["mode"]
+    has_cache = seg_cache is not None
+
+    def body(carry, xs):
+        p_i, c_i = xs
+        a = dict(aux)
+        a["cache"] = c_i
+        out, extras = B.block_apply(p_i, cfg, carry, a, kind)
+        ys = (extras.get("cache"), extras.get("metrics", {"moe_aux": jnp.float32(0), "moe_dropped": jnp.float32(0)}) if kind == "moe" else None)
+        return out, ys
+
+    fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+    h, ys = jax.lax.scan(fn, h, (seg_p, seg_cache))
+    new_cache, metrics = ys
+    msum = None
+    if kind == "moe":
+        msum = jax.tree.map(jnp.sum, metrics)
+    return h, (new_cache if has_cache else None), msum
+
+
+def _apply_stack(params, cfg, h, aux, cache):
+    """Run all segments. cache: list aligned with segments (entries None in
+    train mode)."""
+    segs = segments(cfg)
+    new_cache = []
+    metrics = {"moe_aux": jnp.float32(0), "moe_dropped": jnp.float32(0)}
+    for si, (kind, n) in enumerate(segs):
+        seg_cache = cache[si] if cache is not None else None
+        if kind == "shared_attn":
+            # n applications of the single shared block, each with its own cache.
+            sc_list = []
+            for j in range(n):
+                a = dict(aux)
+                a["cache"] = jax.tree.map(lambda x: x[j], seg_cache) if seg_cache is not None else None
+                h, extras = B.block_apply(params["shared_attn"], cfg, h, a, "attn")
+                sc_list.append(extras.get("cache"))
+            new_cache.append(_stack(sc_list) if seg_cache is not None else None)
+        else:
+            h, nc, ms = _run_segment(params["segments"][si], cfg, kind, h, aux, seg_cache)
+            new_cache.append(nc)
+            if ms is not None:
+                metrics = jax.tree.map(jnp.add, metrics, ms)
+    return h, new_cache, metrics
+
+
+# --------------------------------------------------------------------------
+# Public API: train forward / prefill / decode
+# --------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return h
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, positions=None):
+    """Training/scoring forward -> (hidden [b,t,d], metrics)."""
+    h = embed_tokens(params, cfg, tokens) if embeds is None else embeds.astype(cfg.jdtype)
+    b, t, _ = h.shape
+    if cfg.pos == "sinusoid":
+        h = h + sinusoid_positions(t, cfg.d_model).astype(h.dtype)[None]
+    if positions is None:
+        positions = make_positions(cfg, b, t)
+    aux = {"mode": "train", "positions": positions, "cache": None, "cache_len": None}
+    h, _, metrics = _apply_stack(params, cfg, h, aux, None)
+    h = B.apply_norm(params["final_norm"], cfg, h)
+    return h, metrics
+
+
+def logits_fn(params, cfg, h):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ head).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask pad columns
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    out = []
+    for kind, n in segments(cfg):
+        k = "attn" if kind == "shared_attn" else kind
+        out.append(_stack([B.block_cache_init(cfg, k, batch, max_len) for _ in range(n)]))
+    return out
+
+
+def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache):
+    """Fill the cache with a full prompt; returns (last-token logits, cache)."""
+    h = embed_tokens(params, cfg, tokens) if embeds is None else embeds.astype(cfg.jdtype)
+    b, t, _ = h.shape
+    if cfg.pos == "sinusoid":
+        h = h + sinusoid_positions(t, cfg.d_model).astype(h.dtype)[None]
+    aux = {"mode": "prefill", "positions": make_positions(cfg, b, t), "cache_len": t}
+    h, new_cache, _ = _apply_stack(params, cfg, h, aux, cache)
+    h = B.apply_norm(params["final_norm"], cfg, h)
+    return logits_fn(params, cfg, h[:, -1]), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, cache_len):
+    """One decode step. tokens: [b] int32; cache_len: [] int32 (tokens already
+    in cache). Returns (logits [b, V], new cache)."""
+    h = embed_tokens(params, cfg, tokens[:, None])
+    b = h.shape[0]
+    if cfg.pos == "sinusoid":
+        h = h + _sinusoid_at(cache_len, cfg.d_model).astype(h.dtype)[None, None, :]
+    pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32)[None, None], (b, 1))
+    if cfg.pos == "mrope":
+        pos = jnp.broadcast_to(pos[:, None, :], (b, 3, 1))
+    aux = {"mode": "decode", "positions": pos, "cache_len": cache_len}
+    h, new_cache, _ = _apply_stack(params, cfg, h, aux, cache)
+    h = B.apply_norm(params["final_norm"], cfg, h)
+    return logits_fn(params, cfg, h[:, -1]), new_cache
+
+
+def _sinusoid_at(pos, d):
+    import numpy as np
+    div = jnp.asarray(np.exp(-np.log(10000.0) * np.arange(0, d, 2, dtype=np.float32) / d))
+    ang = jnp.float32(pos) * div
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe
+
+
+# --------------------------------------------------------------------------
+# Whisper-style encoder-decoder
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: [b, t_enc, d_model] stub frame embeddings -> encoder states."""
+    h = frames.astype(cfg.jdtype) + sinusoid_positions(frames.shape[1], cfg.d_model).astype(cfg.jdtype)[None]
+    aux = {"mode": "train", "positions": None, "cache": None, "cache_len": None}
+
+    def body(carry, p_i):
+        x = B.apply_norm(p_i["ln1"], cfg, carry)
+        y, _ = B.attn_apply(p_i["attn"], cfg, x, aux, causal=False)
+        carry = carry + y
+        x = B.apply_norm(p_i["ln2"], cfg, carry)
+        return carry + B.mlp_apply(p_i["ffn"], cfg, x), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(fn, h, params["encoder"]["blocks"])
+    return B.apply_norm(params["encoder"]["final_norm"], cfg, h)
+
+
+def _decoder_stack(params, cfg, h, aux, enc_out, cache, xcache):
+    """Decoder = self-attn blocks interleaved with cross-attention. The block
+    stack is the standard one; cross-attention applies after each block's
+    self-attention using params['cross_attn'][layer]."""
+    segs = segments(cfg)
+    assert len(segs) == 1 and segs[0][0] == "attn", "whisper decoder is dense"
+    seg_p = params["segments"][0]
+    xp = params["cross_attn"]
+    mode = aux["mode"]
+
+    def body(carry, xs):
+        p_i, c_i, xp_i, xc_i = xs
+        a = dict(aux)
+        a["cache"] = c_i
+        # self-attention + (cross) + mlp, hand-rolled to interleave cross-attn
+        x = B.apply_norm(p_i["ln1"], cfg, carry)
+        y, ex = B.attn_apply(p_i["attn"], cfg, x, a)
+        carry = carry + y
+        x = B.apply_norm(xp_i["ln"], cfg, carry)
+        if mode == "decode":
+            q = B._proj(xp_i["attn"]["wq"], x).reshape(x.shape[0], 1, cfg.num_heads, cfg.hd)
+            from .attention import blockwise_attention
+            y = blockwise_attention(q, xc_i["k"], xc_i["v"], causal=False,
+                                    q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+            y = y.reshape(x.shape[0], 1, cfg.num_heads * cfg.hd) @ xp_i["attn"]["wo"]["w"]
+            if "b" in xp_i["attn"]["wo"]:
+                y = y + xp_i["attn"]["wo"]["b"]
+            new_xc = xc_i
+        else:
+            y, _ = B.attn_apply(xp_i["attn"], cfg, x, a, kv_override=enc_out)
+            if mode == "prefill":
+                hkv, hd = cfg.num_kv_heads, cfg.hd
+                bb = enc_out.shape[0]
+                new_xc = {
+                    "k": B._proj(xp_i["attn"]["wk"], enc_out).reshape(bb, -1, hkv, hd),
+                    "v": B._proj(xp_i["attn"]["wv"], enc_out).reshape(bb, -1, hkv, hd),
+                }
+            else:
+                new_xc = None
+        carry = carry + y
+        x = B.apply_norm(p_i["ln2"], cfg, carry)
+        carry = carry + B.mlp_apply(p_i["ffn"], cfg, x)
+        return carry, (ex.get("cache"), new_xc)
+
+    fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+    h, ys = jax.lax.scan(fn, h, (seg_p, cache, xp, xcache))
+    return h, ys
+
+
+def forward_encdec(params, cfg: ModelConfig, frames, dec_tokens):
+    """Training forward for whisper: returns (decoder hidden, metrics)."""
+    enc_out = encode(params, cfg, frames)
+    h = embed_tokens(params, cfg, dec_tokens)
+    t = dec_tokens.shape[1]
+    h = h + sinusoid_positions(t, cfg.d_model).astype(h.dtype)[None]
+    aux = {"mode": "train", "positions": make_positions(cfg, dec_tokens.shape[0], t),
+           "cache": None, "cache_len": None}
+    n = cfg.num_layers
+    h, _ = _decoder_stack(params, cfg, h, aux, enc_out,
+                          cache=_none_caches(cfg, n), xcache=_none_caches(cfg, n))
+    h = B.apply_norm(params["final_norm"], cfg, h)
+    return h, {}
+
+
+def _none_caches(cfg, n):
+    # scan requires an xs pytree; use zero-size placeholders
+    return jnp.zeros((n, 0), jnp.float32)
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_dec_len: int, enc_len: int):
+    n = cfg.num_layers
+    self_cache = _stack([B.attn_cache_init(cfg, batch, max_dec_len) for _ in range(n)])
+    xcache = _stack([
+        {"k": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.hd), cfg.jdtype),
+         "v": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.hd), cfg.jdtype)}
+        for _ in range(n)
+    ])
+    return {"self": self_cache, "cross": xcache}
+
+
+def prefill_encdec(params, cfg: ModelConfig, frames, dec_tokens, cache):
+    enc_out = encode(params, cfg, frames)
+    h = embed_tokens(params, cfg, dec_tokens)
+    b, t = dec_tokens.shape
+    h = h + sinusoid_positions(t, cfg.d_model).astype(h.dtype)[None]
+    aux = {"mode": "prefill", "positions": make_positions(cfg, b, t), "cache_len": t}
+    h, ys = _decoder_stack(params, cfg, h, aux, enc_out,
+                           cache=cache["self"], xcache=_none_caches(cfg, cfg.num_layers))
+    new_self, new_cross = ys
+    h = B.apply_norm(params["final_norm"], cfg, h)
+    return logits_fn(params, cfg, h[:, -1]), {"self": new_self, "cross": new_cross}
+
+
+def decode_step_encdec(params, cfg: ModelConfig, tokens, cache, cache_len):
+    h = embed_tokens(params, cfg, tokens[:, None])
+    b = h.shape[0]
+    h = h + _sinusoid_at(cache_len, cfg.d_model).astype(h.dtype)[None, None, :]
+    pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32)[None, None], (b, 1))
+    aux = {"mode": "decode", "positions": pos, "cache_len": cache_len}
+    h, ys = _decoder_stack(params, cfg, h, aux, None,
+                           cache=cache["self"], xcache=cache["cross"])
+    new_self, _ = ys
+    h = B.apply_norm(params["final_norm"], cfg, h)
+    return logits_fn(params, cfg, h[:, -1]), {"self": new_self, "cross": cache["cross"]}

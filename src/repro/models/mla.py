@@ -1,0 +1,126 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Train/prefill materializes per-head K/V from the compressed latent c_kv
+(kv_lora_rank wide) and runs ordinary blockwise attention. Decode uses the
+**absorbed** form: W_uk is folded into the query and attention runs directly
+against the [T, kv_lora + rope_dim] latent cache, so per-token cache cost is
+O(kv_lora + d_rope) = 576 floats — the property that makes this arch
+eligible for the long_500k shape (memory-sub-quadratic decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import blockwise_attention
+from .common import ModelConfig, apply_rope, dense_init, rmsnorm
+
+
+def init(key, cfg: ModelConfig):
+    m = cfg.mla
+    h = cfg.num_heads
+    k = jax.random.split(key, 6)
+    qdim = h * (m.nope_head_dim + m.rope_head_dim)
+    p = {
+        "wq": {"w": dense_init(k[0], (cfg.d_model, qdim), cfg.jdtype)},
+        "w_dkv": {"w": dense_init(k[1], (cfg.d_model, m.kv_lora_rank + m.rope_head_dim), cfg.jdtype)},
+        "kv_norm": {"w": jnp.ones((m.kv_lora_rank,), cfg.jdtype)},
+        "w_uk": {"w": dense_init(k[2], (m.kv_lora_rank, h * m.nope_head_dim), cfg.jdtype)},
+        "w_uv": {"w": dense_init(k[3], (m.kv_lora_rank, h * m.v_head_dim), cfg.jdtype)},
+        "wo": {"w": dense_init(k[4], (h * m.v_head_dim, cfg.d_model), cfg.jdtype)},
+    }
+    return p
+
+
+def _project_q(params, cfg, x, positions):
+    m = cfg.mla
+    h = cfg.num_heads
+    b, t, _ = x.shape
+    q = (x @ params["wq"]["w"]).reshape(b, t, h, m.nope_head_dim + m.rope_head_dim)
+    qn, qr = jnp.split(q, [m.nope_head_dim], axis=-1)
+    qr = apply_rope(qr.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    return qn, qr
+
+
+def _latent(params, cfg, x, positions):
+    m = cfg.mla
+    ckv_kr = x @ params["w_dkv"]["w"]
+    ckv, kr = jnp.split(ckv_kr, [m.kv_lora_rank], axis=-1)
+    ckv = rmsnorm(ckv, params["kv_norm"]["w"], cfg.norm_eps)
+    kr = apply_rope(kr[:, :, None, :].transpose(0, 2, 1, 3), positions,
+                    cfg.rope_theta).transpose(0, 2, 1, 3)[:, :, 0, :]
+    return ckv, kr  # [b,t,kvr], [b,t,dr]
+
+
+def apply_seq(params, cfg: ModelConfig, x, positions, *, return_cache=False,
+              differentiable=False):
+    """Full-sequence MLA. x: [b,t,d]. Returns out (+ latent cache)."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b, t, _ = x.shape
+    qn, qr = _project_q(params, cfg, x, positions)
+    ckv, kr = _latent(params, cfg, x, positions)
+    kn = (ckv @ params["w_uk"]["w"]).reshape(b, t, h, m.nope_head_dim)
+    v = (ckv @ params["w_uv"]["w"]).reshape(b, t, h, m.v_head_dim)
+    qf = jnp.concatenate([qn, qr], axis=-1)
+    kf = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :], (b, t, h, m.rope_head_dim))], axis=-1)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    # v is narrower than the qk head width; pad v inside _attn_qkv.
+    out = _attn_qkv(qf, kf, v, scale, cfg, differentiable)
+    out = out.reshape(b, t, h * m.v_head_dim) @ params["wo"]["w"]
+    if return_cache:
+        return out, {"ckv": ckv, "kr": kr}
+    return out
+
+
+def _attn_qkv(qf, kf, v, scale: float, cfg, differentiable=False):
+    """blockwise attention where v width differs from qk width: pad v."""
+    dqk = qf.shape[-1]
+    dv = v.shape[-1]
+    if dv < dqk:
+        vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv)))
+    else:
+        vpad = v
+    out = blockwise_attention(qf, kf, vpad, causal=True, scale=scale,
+                              q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                              differentiable=differentiable)
+    return out[..., :dv]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), cfg.jdtype),
+        "kr": jnp.zeros((batch, max_len, m.rope_head_dim), cfg.jdtype),
+    }
+
+
+def apply_decode(params, cfg: ModelConfig, x, cache, cache_len):
+    """Absorbed-matrix single-token decode. x: [b, 1, d]."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    qn, qr = _project_q(params, cfg, x, pos)              # [b,1,h,dn], [b,1,h,dr]
+    ckv_t, kr_t = _latent(params, cfg, x, pos)            # [b,1,kvr], [b,1,dr]
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t.astype(cache["ckv"].dtype), cache_len, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_t.astype(cache["kr"].dtype), cache_len, axis=1)
+
+    # Absorb W_uk into the query: q_lat [b,h,kvr]
+    wuk = params["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_lat = jnp.einsum("bhd,khd->bhk", qn[:, 0].astype(jnp.float32),
+                       wuk.transpose(0, 1, 2).astype(jnp.float32))
+    s_len = ckv_cache.shape[1]
+    scores = (
+        jnp.einsum("bhk,bsk->bhs", q_lat, ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bhr,bsr->bhs", qr[:, 0].astype(jnp.float32), kr_cache.astype(jnp.float32))
+    ) / jnp.sqrt(jnp.float32(m.nope_head_dim + m.rope_head_dim))
+    mask = jnp.arange(s_len)[None, None, :] <= cache_len
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsk->bhk", w, ckv_cache.astype(jnp.float32))  # [b,h,kvr]
+    wuv = params["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhk,khd->bhd", ctx, wuv.astype(jnp.float32))
+    out = o.reshape(b, 1 * h * m.v_head_dim).astype(x.dtype)[:, None, :]
+    out = out.reshape(b, 1, h * m.v_head_dim) @ params["wo"]["w"]
+    return out, {"ckv": ckv_cache, "kr": kr_cache}

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN with capacity-based grouped dispatch.
+
+TPU/SPMD design (see DESIGN.md §6): activations are model-axis-replicated
+under 2D TP+DP sharding, so per-group dispatch (top-k -> position-in-expert
+-> gather to [G, E, C, d]) is **local** on every device; the expert dimension
+E is sharded over the model axis (expert parallelism), and the weighted
+combine scatter-add produces a model-partial result that SPMD completes with
+the same all-reduce a tensor-parallel FFN needs — EP rides the TP collective,
+no explicit all-to-all required.
+
+This is also where the paper's technique integrates with the LM stack:
+token->expert dispatch is a dataflow-firing problem, and the dispatch order
+within a group is *criticality-ordered* (expert load = criticality), the
+direct analogue of the paper's criticality-sorted ready-node memory: the
+position-in-expert ranking that decides which tokens survive the capacity
+cut processes the most-loaded (most critical) experts' tokens first.
+
+Groups are sequences (G == batch), so groups distribute evenly over the data
+axis. Capacity C = ceil(top_k * T * capacity_factor / E); overflow drops
+(standard Switch-style), counted in metrics.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, act_fn, dense_init
+
+
+def _constrain_ep(x):
+    """Pin the expert dimension (axis 1 of [G, E, C, ...]) to the "model"
+    mesh axis. Without this, SPMD may materialize dispatch tensors
+    replicated across the model axis (observed 16x traffic on dbrx); a
+    no-op when no mesh with a "model" axis is active (smoke tests)."""
+    try:
+        from jax.sharding import PartitionSpec as P  # noqa: PLC0415
+        spec = P(*([None, "model"] + [None] * (x.ndim - 2)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def init(key, cfg: ModelConfig):
+    m = cfg.moe
+    k = jax.random.split(key, 5)
+    e, d, f = m.num_experts, cfg.d_model, m.d_ff_expert
+    p = {
+        "router": {"w": dense_init(k[0], (d, e), jnp.float32)},
+        "w_gate": dense_init(k[1], (e, d, f), cfg.jdtype),
+        "w_up": dense_init(k[2], (e, d, f), cfg.jdtype),
+        "w_down": dense_init(k[3], (e, f, d), cfg.jdtype),
+    }
+    if m.num_shared:
+        fs = m.num_shared * m.d_ff_expert
+        ks = jax.random.split(k[4], 3)
+        p["shared"] = {
+            "w_gate": {"w": dense_init(ks[0], (d, fs), cfg.jdtype)},
+            "w_up": {"w": dense_init(ks[1], (d, fs), cfg.jdtype)},
+            "w_down": {"w": dense_init(ks[2], (fs, d), cfg.jdtype)},
+        }
+    return p
+
+
+def apply(params, cfg: ModelConfig, x):
+    """x: [b, t, d] -> ([b, t, d], metrics dict)."""
+    m = cfg.moe
+    act = act_fn(cfg.act)
+    g, t, d = x.shape  # groups == sequences
+    e, k = m.num_experts, m.top_k
+    cap = max(1, math.ceil(k * t * m.capacity_factor / e))
+    cap = min(cap, t * k)
+
+    logits = (x.astype(jnp.float32) @ params["router"]["w"])          # [g,t,e]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                              # [g,t,k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # --- position-in-expert (the capacity cut) ---
+    fe = topi.reshape(g, t * k)                                       # assignments
+    fw = topw.reshape(g, t * k)
+    if m.dispatch_order == "criticality":
+        # rank assignments per expert by DESCENDING router weight: under
+        # capacity pressure the least-critical tokens drop, the direct
+        # analogue of the paper's criticality-sorted ready-node memory.
+        key = fe.astype(jnp.float32) * 2.0 + (1.0 - jax.lax.stop_gradient(fw))
+        order = jnp.argsort(key, axis=1)                              # [g,tk]
+        fe_srt = jnp.take_along_axis(fe, order, axis=1)
+        oh = jax.nn.one_hot(fe_srt, e, dtype=jnp.int32)
+        pos_srt = jnp.take_along_axis(
+            jnp.cumsum(oh, axis=1) - 1, fe_srt[..., None], axis=-1)[..., 0]
+        # invert the permutation with a GATHER (a batched scatter here trips
+        # a jax-0.8 transpose bug under grad): mypos[i] = pos_srt[inv[i]].
+        inv = jnp.argsort(order, axis=1)
+        mypos = jnp.take_along_axis(pos_srt, inv, axis=1)
+    else:  # "arrival": FCFS in token order (in-order baseline)
+        oh = jax.nn.one_hot(fe, e, dtype=jnp.int32)                   # [g,tk,e]
+        pos = jnp.cumsum(oh, axis=1) - 1                              # running count
+        mypos = jnp.take_along_axis(pos, fe[..., None], axis=-1)[..., 0]
+    keep = mypos < cap
+    dropped = jnp.sum(~keep)
+
+    tok = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(t * k)
+    # dispatch tables: token index + combine weight per (expert, slot).
+    # Dropped assignments get an out-of-bounds expert id -> mode="drop".
+    gidx = jnp.arange(g)[:, None]
+    drop_e = jnp.where(keep, fe, e)
+    idx_table = jnp.full((g, e, cap), t, jnp.int32)                   # t == pad row
+    idx_table = idx_table.at[gidx, drop_e, mypos].set(
+        jnp.broadcast_to(tok[None, :], (g, t * k)), mode="drop")
+    w_table = jnp.zeros((g, e, cap), jnp.float32)
+    w_table = w_table.at[gidx, drop_e, mypos].set(fw, mode="drop")
+
+    xpad = jnp.concatenate([x, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        xpad[:, None, :, :], idx_table[..., None].clip(0, t), axis=2
+    )                                                                  # [g,e,cap,d]
+    if m.ep_constraint:
+        xe = _constrain_ep(xe)  # see MoECfg.ep_constraint / EXPERIMENTS §Perf B1
+
+    h = act(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, params["w_up"])
+    oe = jnp.einsum("gecf,efd->gecd", h, params["w_down"])             # [g,e,cap,d]
+    oe = oe * w_table[..., None].astype(oe.dtype)
+
+    out = jnp.zeros((g, t + 1, d), oe.dtype)
+    out = out.at[gidx[:, :, None], idx_table, :].add(oe, mode="drop")[:, :t]
+
+    if m.num_shared:
+        s = params["shared"]
+        hs = act(x @ s["w_gate"]["w"]) * (x @ s["w_up"]["w"])
+        out = out + hs @ s["w_down"]["w"]
+
+    # Switch-style load-balance loss (mean over groups).
+    me = probs.mean(axis=(0, 1))                                        # [e]
+    ce = jax.nn.one_hot(topi, e).sum(2).mean(axis=(0, 1))               # frac tokens
+    aux = e * jnp.sum(me * ce)
+    metrics = {"moe_aux": aux, "moe_dropped": dropped.astype(jnp.float32)}
+    return out.astype(x.dtype), metrics

@@ -1,0 +1,209 @@
+"""Mamba2 (state-space duality / SSD) blocks in JAX.
+
+Implements the chunked SSD algorithm: intra-chunk quadratic attention-like
+term + inter-chunk state recurrence (lax.scan over chunks), which is the
+TPU-friendly form (MXU matmuls inside chunks, O(T/chunk) sequential steps).
+Decode keeps an O(1)-per-token recurrent state [B, H, P, N] plus a d_conv
+rolling conv buffer — this is what makes SSM archs eligible for long_500k.
+
+Faithful simplifications (noted in DESIGN.md): ngroups=1, no sequence
+parallelism inside the chunk scan, gated RMSNorm as in the reference impl.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rmsnorm
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state  # x, B, C go through the conv
+    return d_inner, nheads, conv_dim
+
+
+def init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = dims(cfg)
+    d_in_all = 2 * d_inner + 2 * s.d_state + nheads  # z, x, B, C, dt
+    k = jax.random.split(key, 4)
+    dt = jnp.exp(
+        jax.random.uniform(k[3], (nheads,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)
+    )
+    return {
+        "in_proj": {"w": dense_init(k[0], (cfg.d_model, d_in_all), cfg.jdtype)},
+        "conv": {
+            "w": dense_init(k[1], (s.d_conv, conv_dim), cfg.jdtype, scale=0.5),
+            "b": jnp.zeros((conv_dim,), cfg.jdtype),
+        },
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus
+        "norm": {"w": jnp.ones((d_inner,), cfg.jdtype)},
+        "out_proj": {"w": dense_init(k[2], (d_inner, cfg.d_model), cfg.jdtype)},
+    }
+
+
+def _split(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, nheads, _ = dims(cfg)
+    z, x, B, C, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + s.d_state, 2 * d_inner + 2 * s.d_state],
+        axis=-1,
+    )
+    return z, x, B, C, dt
+
+
+def _segsum_exp(a):
+    """a: [..., q, h] per-step log decay -> L [..., h, q, q] with
+    L[i, j] = exp(sum_{j<k<=i} a_k) for i >= j else 0."""
+    q = a.shape[-2]
+    cs = jnp.cumsum(a, axis=-2)                                   # [..., q, h]
+    diff = cs[..., :, None, :] - cs[..., None, :, :]              # [..., i, j, h]
+    iota = jnp.arange(q)
+    mask = iota[:, None] >= iota[None, :]
+    L = jnp.where(mask[..., None], jnp.exp(diff), 0.0)
+    return jnp.moveaxis(L, -1, -3)                                # [..., h, i, j]
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int, compute_dtype=jnp.float32):
+    """Chunked SSD. x: [b,t,h,p], dt: [b,t,h] (>=0), A: [h] (<0),
+    B, C: [b,t,n] (ngroups=1). Returns (y [b,t,h,p], final_state [b,h,p,n]).
+
+    ``compute_dtype``: dtype of the big intra-chunk einsum operands (L,
+    decay-weighted x, B/C). bf16 halves the dominant HBM traffic (§Perf);
+    accumulation and the inter-chunk recurrence stay f32.
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    pad = -t % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nc = tp // chunk
+    cd = jnp.dtype(compute_dtype)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(cd)
+    Cc = C.reshape(b, nc, chunk, n).astype(cd)
+    a = dtc * A                                                   # [b,c,q,h]
+
+    xdt = (xc.astype(jnp.float32) * dtc[..., None]).astype(cd)    # [b,c,q,h,p]
+
+    # --- intra-chunk (quadratic within chunk) ---
+    L = _segsum_exp(a).astype(cd)                                 # [b,c,h,q,q]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=jnp.float32).astype(cd)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # --- chunk summary states ---
+    a_cs = jnp.cumsum(a, axis=2)                                  # [b,c,q,h]
+    a_tail = a_cs[:, :, -1:, :] - a_cs                            # decay to chunk end
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc,
+                        jnp.exp(a_tail).astype(cd), xdt,
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk recurrence ---
+    a_sum = a_cs[:, :, -1, :]                                     # [b,c,h]
+
+    def step(hprev, inp):
+        st, asum = inp                                            # [b,h,p,n], [b,h]
+        hnew = hprev * jnp.exp(asum)[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4), a_sum.transpose(1, 0, 2))
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                      # [b,c,h,p,n]
+
+    # --- inter-chunk contribution ---
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc,
+                       jnp.exp(a_cs).astype(cd), hprevs.astype(cd),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, tp, h, p)[:, :t]
+    return y, hlast
+
+
+def _conv1d(u, w, b, init_state=None):
+    """Causal depthwise conv. u: [b, t, c], w: [k, c] -> [b, t, c]."""
+    k = w.shape[0]
+    if init_state is None:
+        upad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        upad = jnp.concatenate([init_state.astype(u.dtype), u], axis=1)
+    out = sum(
+        upad[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def apply_seq(params, cfg: ModelConfig, h_in):
+    """Full-sequence Mamba2 block. h_in: [b, t, d_model] -> same shape."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = dims(cfg)
+    zxbcdt = h_in @ params["in_proj"]["w"]
+    z, xraw, Braw, Craw, dt = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xraw, Braw, Craw], axis=-1)
+    conv_out = jax.nn.silu(_conv1d(conv_in, params["conv"]["w"], params["conv"]["b"]))
+    x, B, C = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+    bsz, t, _ = h_in.shape
+    xh = x.reshape(bsz, t, nheads, s.head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, _ = ssd_scan(xh, dtp, A, B, C, s.chunk,
+                    compute_dtype=jnp.dtype(s.compute_dtype))
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, t, d_inner).astype(h_in.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                params["norm"]["w"], cfg.norm_eps)
+    return y @ params["out_proj"]["w"]
+
+
+def init_cache(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = dims(cfg)
+    return {
+        "state": jnp.zeros((batch, nheads, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.float32),
+    }
+
+
+def apply_decode(params, cfg: ModelConfig, h_in, cache):
+    """Single-token step. h_in: [b, 1, d_model] -> ([b, 1, d_model], cache)."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = dims(cfg)
+    zxbcdt = h_in @ params["in_proj"]["w"]
+    z, xraw, Braw, Craw, dt = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xraw, Braw, Craw], axis=-1)      # [b, 1, c]
+    conv_out = jax.nn.silu(
+        _conv1d(conv_in, params["conv"]["w"], params["conv"]["b"],
+                init_state=cache["conv"])
+    )
+    new_conv = jnp.concatenate([cache["conv"], conv_in.astype(jnp.float32)], axis=1)[:, 1:]
+    x, B, C = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+    bsz = h_in.shape[0]
+    xh = x.reshape(bsz, nheads, s.head_dim).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [b,h]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dtp * A)                                        # [b,h]
+    Bf = B[:, 0].astype(jnp.float32)                             # [b,n]
+    Cf = C[:, 0].astype(jnp.float32)
+    dBx = jnp.einsum("bn,bh,bhp->bhpn", Bf, dtp, xh)
+    state = cache["state"] * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cf, state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(h_in.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                params["norm"]["w"], cfg.norm_eps)
+    return y @ params["out_proj"]["w"], {"state": state, "conv": new_conv}

@@ -1,0 +1,71 @@
+"""AdamW with fp32 master weights, decoupled weight decay and global-norm
+gradient clipping. Optimizer state is a pytree mirroring params, so the FSDP
+sharding rules apply verbatim (ZeRO-style sharded optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+OptState = dict  # {"m": tree, "v": tree, "master": tree|None, "count": i32}
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Any], Any] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_weights: bool = True
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if self.master_weights:
+            # copy=True: with f32 params astype would alias the param buffer
+            # and break buffer donation in jitted train steps.
+            state["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        return state
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, metrics)."""
+        count = state["count"] + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)) + 1e-16)
+        scale = jnp.minimum(1.0, self.clip_norm / gnorm)
+        gf = jax.tree.map(lambda g: g * scale, gf)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], gf)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state["v"], gf)
+        c = count.astype(jnp.float32)
+        mhat_s = 1.0 / (1 - b1 ** c)
+        vhat_s = 1.0 / (1 - b2 ** c)
+        lr = self._lr(count)
+
+        base = state.get("master", params)
+
+        def step_fn(p32, mm, vv):
+            upd = (mm * mhat_s) / (jnp.sqrt(vv * vhat_s) + self.eps)
+            return p32.astype(jnp.float32) * (1 - lr * self.weight_decay) - lr * upd
+
+        new_master = jax.tree.map(step_fn, base, m, v)
+        new_params = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params)
+        new_state = {"m": m, "v": v, "count": count}
+        if self.master_weights:
+            new_state["master"] = new_master
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

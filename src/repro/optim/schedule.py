@@ -1,0 +1,31 @@
+"""LR schedules. WSD (warmup-stable-decay) is MiniCPM's schedule and the
+default for all training configs; cosine provided for comparison."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1):
+    """Warmup (linear) -> stable (constant peak) -> decay (exponential to
+    final_frac * peak). Step counts are in optimizer steps."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        in_decay = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+        decay_mult = jnp.power(jnp.asarray(final_frac, jnp.float32), in_decay)
+        return jnp.where(step < warmup, warm, peak_lr * decay_mult)
+
+    return lr
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return lr

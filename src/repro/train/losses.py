@@ -1,0 +1,61 @@
+"""Chunked cross-entropy: the [B, T, vocab] logits tensor never materializes.
+
+With vocab up to 256K (gemma) and 1M tokens per train step, full logits would
+be ~0.5 TB in bf16 — instead the head matmul + log-softmax run per sequence
+chunk under ``jax.checkpoint``, so peak live memory is one chunk's logits and
+backward recomputes them. This is a standard large-vocab production trick and
+part of the beyond-paper §Perf story.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_softmax_xent(h, head, labels, mask=None, chunk: int = 2048,
+                         z_loss: float = 0.0, valid_vocab: int | None = None):
+    """h: [b, t, d]; head: [d, V]; labels: [b, t] int32; mask: [b, t] (1=count).
+
+    ``valid_vocab``: mask logit columns >= this (padded embedding tables).
+    Returns (mean_loss, metrics). Loss in f32.
+    """
+    b, t, d = h.shape
+    v = head.shape[-1]
+    c = min(chunk, t)
+    pad = -t % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else None
+    tp = t + pad
+    nc = tp // c
+    if mask is None:
+        mask = (jnp.arange(tp)[None, :] < t).astype(jnp.float32) * jnp.ones((b, 1))
+    mask = mask.astype(jnp.float32)
+
+    hs = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    ms = mask.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_fn(carry, xs):
+        hc, lc, mc = xs
+        logits = (hc.astype(jnp.float32) @ head.astype(jnp.float32))      # [b,c,V]
+        if valid_vocab is not None and valid_vocab < v:
+            logits = jnp.where(jnp.arange(v) < valid_vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)                            # [b,c]
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        zl = (lse ** 2) * mc * z_loss
+        correct = (logits.argmax(-1) == lc).astype(jnp.float32) * mc
+        loss_sum, z_sum, denom, ncorrect = carry
+        return (loss_sum + nll.sum(), z_sum + zl.sum(), denom + mc.sum(),
+                ncorrect + correct.sum()), None
+
+    (loss_sum, z_sum, denom, ncorrect), _ = jax.lax.scan(
+        chunk_fn, (jnp.float32(0), jnp.float32(0), jnp.float32(0), jnp.float32(0)),
+        (hs, ls, ms))
+    denom = jnp.maximum(denom, 1.0)
+    loss = loss_sum / denom + z_sum / denom
+    return loss, {"xent": loss_sum / denom, "accuracy": ncorrect / denom,
+                  "tokens": denom}

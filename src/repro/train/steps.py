@@ -1,0 +1,110 @@
+"""Train / serve step builders.
+
+``make_train_step`` returns a pure function (state, batch) -> (state, metrics)
+suitable for jit/pjit with donated state; gradient accumulation is a
+``lax.scan`` over microbatches with f32 gradient accumulators (comm overlap:
+the per-microbatch backward and the accumulator adds pipeline under XLA's
+scheduler; the single optimizer apply keeps FSDP reduce traffic at 1x).
+
+Serve steps: prefill fills the KV/SSM cache from a prompt; decode_step
+advances one token (greedy or sampled).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+from .losses import chunked_softmax_xent
+
+
+def make_loss_fn(cfg: ModelConfig, moe_aux_coef: float = 0.01, z_loss: float = 0.0):
+    def loss_fn(params, batch):
+        if cfg.encdec is not None:
+            h, metrics = lm.forward_encdec(params, cfg, batch["frames"], batch["tokens"])
+        elif "embeds" in batch:
+            h, metrics = lm.forward(params, cfg, embeds=batch["embeds"])
+        else:
+            h, metrics = lm.forward(params, cfg, tokens=batch["tokens"])
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        loss, lmetrics = chunked_softmax_xent(
+            h, head, batch["labels"], batch.get("mask"), chunk=cfg.loss_chunk,
+            z_loss=z_loss, valid_vocab=cfg.vocab_size)
+        total = loss
+        if metrics:
+            total = total + moe_aux_coef * metrics.get("moe_aux", 0.0)
+        return total, {**lmetrics, **{k: v for k, v in metrics.items()}}
+
+    return loss_fn
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer) -> dict:
+    params = lm.init(key, cfg)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, grad_accum: int = 1,
+                    moe_aux_coef: float = 0.01, z_loss: float = 0.0):
+    loss_fn = make_loss_fn(cfg, moe_aux_coef, z_loss)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = grad_fn(params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            metrics = {}
+        new_params, new_opt, om = optimizer.update(grads, state["opt"], params)
+        out_metrics = {"loss": loss, **metrics, **om}
+        return ({"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+                out_metrics)
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        if cfg.encdec is not None:
+            return lm.prefill_encdec(params, cfg, batch["frames"], batch["tokens"], cache)
+        if "embeds" in batch:
+            return lm.prefill(params, cfg, embeds=batch["embeds"], cache=cache)
+        return lm.prefill(params, cfg, tokens=batch["tokens"], cache=cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, greedy: bool = True, temperature: float = 1.0):
+    def decode_step(params, tokens, cache, cache_len, key=None):
+        if cfg.encdec is not None:
+            logits, cache = lm.decode_step_encdec(params, cfg, tokens, cache, cache_len)
+        else:
+            logits, cache = lm.decode_step(params, cfg, tokens, cache, cache_len)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return decode_step

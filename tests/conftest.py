@@ -1,0 +1,4 @@
+import collections
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

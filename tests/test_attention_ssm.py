@@ -1,0 +1,120 @@
+"""Blockwise attention + SSD numerics (portable model-stack paths)."""
+import dataclasses
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import flash_attention_ref
+from repro.models.attention import blockwise_attention
+from repro.models.common import ModelConfig, SSMCfg
+from repro.models import ssm
+
+
+def _t(x):
+    return jnp.asarray(x.transpose(0, 2, 1, 3))
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,tq,tkv,d,causal,kvlen,diff",
+    [
+        (2, 4, 2, 256, 256, 64, True, None, False),
+        (2, 4, 2, 256, 256, 64, True, None, True),
+        (1, 8, 8, 100, 100, 32, True, None, True),
+        (2, 4, 1, 1, 512, 64, True, 300, False),
+        (1, 6, 2, 64, 512, 48, True, 512, False),
+        (1, 4, 4, 128, 96, 64, False, None, False),
+    ],
+)
+def test_blockwise_matches_oracle(b, hq, hkv, tq, tkv, d, causal, kvlen, diff):
+    rng = np.random.default_rng(1)
+    q = rng.standard_normal((b, hq, tq, d)).astype(np.float32)
+    k = rng.standard_normal((b, hkv, tkv, d)).astype(np.float32)
+    v = rng.standard_normal((b, hkv, tkv, d)).astype(np.float32)
+    got = blockwise_attention(
+        _t(q), _t(k), _t(v), causal=causal, q_chunk=64, kv_chunk=128,
+        kv_len=None if kvlen is None else jnp.int32(kvlen),
+        differentiable=diff)
+    kk = k[:, :, :kvlen] if kvlen else k
+    vv = v[:, :, :kvlen] if kvlen else v
+    want = flash_attention_ref(jnp.asarray(q), jnp.asarray(kk), jnp.asarray(vv), causal=causal)
+    np.testing.assert_allclose(np.asarray(got).transpose(0, 2, 1, 3),
+                               np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_gradients_match_oracle():
+    rng = np.random.default_rng(2)
+    b, h, t, d = 1, 2, 64, 16
+    q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+
+    def f_block(q, k, v):
+        return blockwise_attention(q, k, v, causal=True, q_chunk=16,
+                                   kv_chunk=16, differentiable=True).sum()
+
+    def f_ref(q, k, v):
+        qq, kk, vv = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+        return flash_attention_ref(qq, kk, vv, causal=True).sum()
+
+    g1 = jax.grad(f_block, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-4)
+
+
+def _ssm_cfg(chunk):
+    return ModelConfig(
+        name="t", family="ssm", num_layers=1, d_model=48, num_heads=0,
+        num_kv_heads=0, d_ff=0, vocab_size=64, dtype="float32",
+        ssm=SSMCfg(d_state=8, d_conv=4, expand=2, head_dim=12, chunk=chunk))
+
+
+def test_ssd_chunked_equals_sequential_decode():
+    cfg = _ssm_cfg(8)
+    params = ssm.init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 21, 48), jnp.float32) * 0.5
+    out_seq = ssm.apply_seq(params, cfg, x)
+    cache = ssm.init_cache(cfg, 2)
+    outs = []
+    for t in range(21):
+        y, cache = ssm.apply_decode(params, cfg, x[:, t:t + 1], cache)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(out_seq), np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(st.sampled_from([4, 8, 16, 32]), st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_ssd_chunk_invariance(chunk, seed):
+    cfg1 = _ssm_cfg(8)
+    cfg2 = _ssm_cfg(chunk)
+    params = ssm.init(jax.random.key(seed), cfg1)
+    x = jax.random.normal(jax.random.key(seed + 1), (1, 33, 48), jnp.float32) * 0.5
+    o1 = ssm.apply_seq(params, cfg1, x)
+    o2 = ssm.apply_seq(params, cfg2, x)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_prefill_cache_matches_decode_continuation():
+    from repro.models import blocks as B
+    cfg = _ssm_cfg(8)
+    params = {"ln1": {"w": jnp.ones((48,))}, "mamba": ssm.init(jax.random.key(0), cfg)}
+    x = jax.random.normal(jax.random.key(3), (1, 16, 48), jnp.float32) * 0.3
+    # full sequence through block
+    aux = {"mode": "train", "positions": None, "cache": None, "cache_len": None}
+    full, _ = B.block_apply(params, cfg, x, aux, "mamba")
+    # prefill 12 then decode 4
+    aux_p = {"mode": "prefill", "positions": None, "cache": None, "cache_len": 12}
+    hp, ex = B.block_apply(params, cfg, x[:, :12], aux_p, "mamba")
+    cache = ex["cache"]
+    np.testing.assert_allclose(np.asarray(full[:, :12]), np.asarray(hp), rtol=2e-4, atol=2e-4)
+    h = []
+    for t in range(12, 16):
+        aux_d = {"mode": "decode", "positions": None, "cache": cache, "cache_len": t}
+        y, ex = B.block_apply(params, cfg, x[:, t:t + 1], aux_d, "mamba")
+        cache = ex["cache"]
+        h.append(y)
+    np.testing.assert_allclose(np.asarray(full[:, 12:]),
+                               np.asarray(jnp.concatenate(h, 1)), rtol=3e-4, atol=3e-4)

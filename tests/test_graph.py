@@ -1,0 +1,81 @@
+"""Dataflow-graph IR: construction, validation, reference eval, criticality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import workloads as wl
+from repro.core.criticality import asap_levels, criticality, height, slack
+from repro.core.graph import (
+    OP_ADD, OP_MUL, GraphBuilder, reference_evaluate,
+)
+
+
+def test_builder_and_reference_eval():
+    b = GraphBuilder()
+    x = b.input(2.0)
+    y = b.input(3.0)
+    s = b.op(OP_ADD, x, y)      # 5
+    p = b.op(OP_MUL, s, y)      # 15
+    g = b.build()
+    vals = reference_evaluate(g)
+    assert vals[s] == pytest.approx(5.0)
+    assert vals[p] == pytest.approx(15.0)
+
+
+def test_validation_catches_missing_operand():
+    b = GraphBuilder()
+    x = b.input(1.0)
+    b._op.append(OP_ADD)  # corrupt: op node with no edges
+    b._init.append(0.0)
+    with pytest.raises(ValueError):
+        b.build()
+
+
+def test_topological_order_covers_all():
+    g = wl.random_dag(200, seed=0)
+    order = g.topological_order()
+    assert sorted(order) == list(range(g.num_nodes))
+
+
+def test_height_and_slack_invariants():
+    g = wl.random_dag(150, seed=1)
+    h = height(g)
+    s = slack(g)
+    a = asap_levels(g)
+    assert (s >= 0).all()
+    assert (h >= 0).all()
+    # critical path nodes have zero slack
+    assert (s == 0).sum() >= 1
+    # height decreases along edges
+    ptr, dst = g.fanout_ptr, g.fanout_dst
+    for v in range(g.num_nodes):
+        for u in dst[ptr[v]:ptr[v + 1]]:
+            assert h[v] >= h[u] + 1
+            assert a[u] >= a[v] + 1
+
+
+@given(st.integers(10, 120), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_random_dag_reference_eval_finite(n, seed):
+    g = wl.random_dag(n, seed=seed)
+    g.validate()
+    vals = reference_evaluate(g)
+    assert np.isfinite(vals).all()
+
+
+def test_criticality_metrics_exist():
+    g = wl.reduction_tree(16)
+    for m in ("height", "neg_slack", "fanout_height"):
+        c = criticality(g, m)
+        assert c.shape == (g.num_nodes,)
+    with pytest.raises(ValueError):
+        criticality(g, "bogus")
+
+
+def test_workload_generators_shapes():
+    for g in [wl.chain(8), wl.reduction_tree(9), wl.layered_dag(4, 6),
+              wl.sparse_lu_graph(8, 0.4, seed=1), wl.banded_lu_graph(12, 3),
+              wl.arrow_lu_graph(2, 4, 3), wl.elimination_tree_graph(2, 3, 4)]:
+        g.validate()
+        assert g.num_nodes > 0
+        assert np.isfinite(reference_evaluate(g)).all()

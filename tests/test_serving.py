@@ -1,0 +1,69 @@
+"""Serving correctness: prefill + token-by-token decode must reproduce the
+teacher-forced forward logits (MoE archs tested with no-drop capacity, since
+capacity cuts are sequence-length dependent by design)."""
+import dataclasses
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import lm
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+def _nodrop(cfg):
+    if cfg.moe is not None:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = _nodrop(get_config(arch, smoke=True))
+    params = lm.init(jax.random.key(1), cfg)
+    rng = np.random.default_rng(0)
+    b, t, p = 2, 20, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)), jnp.int32)
+    if cfg.encdec is not None:
+        frames = jnp.asarray(rng.standard_normal((b, 24, cfg.d_model)), jnp.float32)
+        h, _ = lm.forward_encdec(params, cfg, frames, toks)
+        full = lm.logits_fn(params, cfg, h)
+        cache = lm.encdec_init_cache(cfg, b, max_dec_len=t, enc_len=24)
+        lg, cache = lm.prefill_encdec(params, cfg, frames, toks[:, :p], cache)
+        np.testing.assert_allclose(lg, full[:, p - 1], **TOL)
+        for i in range(p, t):
+            lg, cache = lm.decode_step_encdec(params, cfg, toks[:, i], cache, jnp.int32(i))
+            np.testing.assert_allclose(lg, full[:, i], **TOL)
+    else:
+        h, _ = lm.forward(params, cfg, tokens=toks)
+        full = lm.logits_fn(params, cfg, h)
+        cache = lm.init_cache(cfg, b, max_len=t)
+        lg, cache = lm.prefill(params, cfg, tokens=toks[:, :p], cache=cache)
+        np.testing.assert_allclose(lg, full[:, p - 1], **TOL)
+        for i in range(p, t):
+            lg, cache = lm.decode_step(params, cfg, toks[:, i], cache, jnp.int32(i))
+            np.testing.assert_allclose(lg, full[:, i], **TOL)
+
+
+def test_greedy_generation_runs():
+    from repro.train.steps import make_decode_step, make_prefill_step
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = lm.init(jax.random.key(0), cfg)
+    b, p, gen = 2, 8, 8
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, p)), jnp.int32)
+    cache = lm.init_cache(cfg, b, max_len=p + gen)
+    prefill = make_prefill_step(cfg)
+    decode = jax.jit(make_decode_step(cfg))
+    logits, cache = prefill(params, {"tokens": toks}, cache)
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [cur]
+    for i in range(gen - 1):
+        cur, _, cache = decode(params, cur, cache, jnp.int32(p + i))
+        outs.append(cur)
+    seq = jnp.stack(outs, 1)
+    assert seq.shape == (b, gen)
+    assert bool((seq >= 0).all()) and bool((seq < cfg.vocab_size).all())
