@@ -6,44 +6,91 @@ sparse-matrix-factorization kernels — on the 16x16 (256 PE) overlay, exactly
 the paper's evaluation setup. The paper's own matrices are not published;
 sizes sweep a few K to ~500K nodes as in Fig. 1.
 
+Each graph size runs the requested scheduler policies through
+``simulate_batch``: the cycle body is vmapped over the policy axis, so a
+sweep compiles once per (graph, memory layout) instead of retracing per
+scheduler. Policies are grouped by ``wants_criticality_order`` and each
+group gets the matching GraphMemory layout — the seed methodology (``ooo``
+on criticality-ordered memory, the FCFS baseline on naive node-id order);
+slot numbering shifts packet-arrival order, so mixing layouts would move
+the tracked speedup by a few percent.
+
 Output CSV: name,us_per_call,derived  where derived = inorder/ooo speedup.
 """
 from __future__ import annotations
 
 import time
 
+from repro.core import schedulers
 from repro.core import workloads as wl
-from repro.core.overlay import OverlayConfig, simulate
+from repro.core.overlay import OverlayConfig, simulate_batch
 from repro.core.partition import build_graph_memory
 
 # (blocks, block_size, border): graph sizes ~15K .. ~470K nodes
 SWEEP = [(4, 10, 8), (8, 10, 8), (16, 10, 8), (32, 10, 8), (64, 10, 8)]
 SWEEP_FULL = SWEEP + [(96, 10, 8), (128, 10, 8)]
 
+DEFAULT_POLICIES = ("ooo", "inorder")
 
-def run(full: bool = False, nx: int = 16, ny: int = 16):
+
+def _run_policies(g, nx, ny, policies, max_cycles=8_000_000):
+    """One batched program per GraphMemory layout group. Returns
+    ({policy: cycles}, wall seconds)."""
+    groups: dict = {}
+    for p in policies:
+        wants = schedulers.get(p).wants_criticality_order
+        groups.setdefault(wants, []).append(p)
+    cyc = {}
+    t0 = time.time()
+    for wants, group in groups.items():
+        gm = build_graph_memory(g, nx, ny, criticality_order=wants)
+        cfgs = [OverlayConfig(scheduler=p, max_cycles=max_cycles) for p in group]
+        for p, r in zip(group, simulate_batch(gm, cfgs)):
+            assert r.done, p
+            cyc[p] = r.cycles
+    return cyc, time.time() - t0
+
+
+def run(full: bool = False, nx: int = 16, ny: int = 16,
+        policies: tuple[str, ...] = DEFAULT_POLICIES):
     rows = []
     for blocks, s, w in (SWEEP_FULL if full else SWEEP):
         g = wl.arrow_lu_graph(blocks, s, w, seed=3)
-        cyc = {}
-        wall = {}
-        for sched in ("ooo", "inorder"):
-            gm = build_graph_memory(g, nx, ny, criticality_order=(sched == "ooo"))
-            t0 = time.time()
-            r = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000))
-            wall[sched] = time.time() - t0
-            assert r.done, (blocks, sched)
-            cyc[sched] = r.cycles
-        rows.append({
+        cyc, wall = _run_policies(g, nx, ny, policies)
+        row = {
             "name": f"fig1_arrow_n{g.num_nodes}",
-            "us_per_call": round(1e6 * (wall["ooo"] + wall["inorder"]), 1),
-            "derived": round(cyc["inorder"] / cyc["ooo"], 4),
+            "us_per_call": round(1e6 * wall, 1),
+            "derived": round(cyc["inorder"] / cyc["ooo"], 4)
+            if {"ooo", "inorder"} <= cyc.keys() else 0.0,
             "nodes": g.num_nodes,
             "edges": g.num_edges,
-            "cycles_ooo": cyc["ooo"],
-            "cycles_inorder": cyc["inorder"],
-        })
+            "wall_s": round(wall, 3),
+        }
+        row.update({f"cycles_{p}": c for p, c in cyc.items()})
+        rows.append(row)
     return rows
+
+
+def sweep_policies(nx: int = 16, ny: int = 16,
+                   blocks: int = 8, block_size: int = 10, border: int = 8):
+    """All registered policies on one mid-size arrow-LU graph (one batched
+    program per layout group). Returns per-scheduler cycles + speedup vs the
+    FCFS baseline."""
+    policies = tuple(sorted(schedulers.REGISTRY))
+    g = wl.arrow_lu_graph(blocks, block_size, border, seed=3)
+    cyc, wall = _run_policies(g, nx, ny, policies)
+    base = cyc["inorder"]
+    return {
+        "nodes": g.num_nodes,
+        "edges": g.num_edges,
+        "grid": [nx, ny],
+        "wall_s": round(wall, 3),
+        "schedulers": [
+            {"scheduler": p, "cycles": c, "done": True,
+             "speedup_vs_inorder": round(base / c, 4)}
+            for p, c in sorted(cyc.items())
+        ],
+    }
 
 
 def main(full: bool = False):

@@ -1,30 +1,59 @@
-"""Scheduler-kernel microbenchmarks: hierarchical LOD pick rate.
+"""Scheduler-kernel microbenchmarks: per-policy pick rate.
 
-Times the jnp reference scheduler step (select + clear) at the paper's
-geometry (256 PEs x 256 flag words == 8 BRAMs' worth of flags) and larger.
-On TPU the Pallas kernel replaces it; interpret-mode timing is not physical,
-so the CSV reports the compiled-jnp path (the simulator's actual hot spot).
+Times (a) the jnp reference LOD scheduler step (select + clear) at the
+paper's geometry (256 PEs x 256 flag words == 8 BRAMs' worth of flags) and
+larger, and (b) every registered scheduler policy's full ``select`` +
+``commit`` step on randomized scheduler state — the simulator's actual hot
+spot per cycle. On TPU the Pallas kernel replaces the LOD inner loop;
+interpret-mode timing is not physical, so the CSV reports the compiled-jnp
+path.
 
 Output CSV: name,us_per_call,derived (derived = selects/s).
 """
 from __future__ import annotations
 
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import schedulers
 from repro.kernels import ref
 
 
 def _time(fn, *args, iters=50):
-    fn(*args)[0].block_until_ready()
+    jax.tree.leaves(fn(*args))[0].block_until_ready()
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
     jax.tree.leaves(out)[0].block_until_ready()
     return (time.time() - t0) / iters
+
+
+def _policy_state(policy, nx, ny, words, rng, fill_rounds=16):
+    """Randomized scheduler state at [nx, ny] PEs x ``words`` flag words,
+    built purely through the Scheduler protocol (init + on_ready), so any
+    registered policy — including future ones — benchmarks on a populated
+    queue rather than its empty init state."""
+    from repro.core.overlay import OverlayConfig
+
+    L = words * 32
+    g = dict(
+        opcode=jnp.zeros((nx, ny, L), jnp.int32),
+        fanin=jnp.full((nx, ny, L), 2, jnp.int32),
+        fo_count=jnp.ones((nx, ny, L), jnp.int32),
+        valid=jnp.ones((nx, ny, L), bool),
+    )
+    st = policy.init(g, OverlayConfig(scheduler=policy.name))
+    ix = jnp.arange(nx)[:, None] * jnp.ones((1, ny), jnp.int32)
+    iy = jnp.arange(ny)[None, :] * jnp.ones((nx, 1), jnp.int32)
+    for _ in range(fill_rounds):
+        slot = jnp.asarray(rng.integers(0, L, size=(nx, ny), dtype=np.int32))
+        ready = jnp.asarray(rng.random(size=(nx, ny)) < 0.75)
+        st = policy.on_ready(st, ix, iy, slot, ready)
+    return jax.tree.map(jnp.asarray, st)
 
 
 def run():
@@ -40,6 +69,30 @@ def run():
             "us_per_call": round(us, 2),
             "derived": round(pes / (us * 1e-6), 0),
         })
+
+    # Full select+commit step for every registered policy (vmapped sweep and
+    # solo simulators both run exactly this per cycle).
+    idle_cache = {}
+    for name in sorted(schedulers.REGISTRY):
+        policy = schedulers.REGISTRY[name]
+        for pes, words in [(256, 8), (256, 64)]:
+            side = int(math.isqrt(pes))
+            st = _policy_state(policy, side, pes // side, words, rng)
+            if pes not in idle_cache:
+                idle_cache[pes] = jnp.ones((side, pes // side), bool)
+            idle = idle_cache[pes]
+
+            @jax.jit
+            def pick(st, idle=idle, policy=policy):
+                cand, have = policy.select(st, idle)
+                return cand, policy.commit(st, idle & have, cand)
+
+            us = _time(pick, st) * 1e6
+            rows.append({
+                "name": f"pick_{name}_{pes}x{words}",
+                "us_per_call": round(us, 2),
+                "derived": round(pes / (us * 1e-6), 0),
+            })
     return rows
 
 

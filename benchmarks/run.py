@@ -2,42 +2,79 @@
 """Benchmark driver.
 
   table1    — RDY-flag overhead / FIFO-elimination capacity model (Table I, §III)
-  kernels   — scheduler (hierarchical LOD) pick-rate microbench
+  kernels   — per-policy scheduler pick-rate microbench (LOD + select/commit)
   fig1      — OoO vs in-order speedup vs graph size (paper Fig. 1)
+  sweep     — every registered policy on one graph via one batched program
   roofline  — per (arch x shape) roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]`` runs everything (fig1 sweeps to ~470K
 nodes with --full; default tops out near ~235K to keep wall-time sane).
+
+Besides the CSV on stdout, the driver snapshots everything machine-readable
+to ``BENCH_overlay.json`` (per-scheduler cycles, wall time, speedups) so the
+perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_overlay.json")
 
 
 def main() -> None:
     full = "--full" in sys.argv
     print("name,us_per_call,derived")
 
+    import jax
+
+    from repro.core import schedulers
+
+    bench: dict = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "policies": sorted(schedulers.REGISTRY),
+            "full": full,
+        }
+    }
+
     from benchmarks import table1_resources
+    bench["table1"] = []
     for name, value, paper in table1_resources.run()[0]:
         note = f" (paper: {paper})" if paper is not None else ""
         print(f"{name},0.0,{value}{note}", flush=True)
+        bench["table1"].append({"name": name, "value": value, "paper": paper})
 
     from benchmarks import kernel_bench
-    for r in kernel_bench.run():
+    bench["kernels"] = kernel_bench.run()
+    for r in bench["kernels"]:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
     from benchmarks import fig1_ooo_speedup
-    for r in fig1_ooo_speedup.run(full=full):
+    bench["fig1"] = fig1_ooo_speedup.run(full=full)
+    for r in bench["fig1"]:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
+    bench["policy_sweep"] = fig1_ooo_speedup.sweep_policies()
+    for row in bench["policy_sweep"]["schedulers"]:
+        print(f"sweep_{row['scheduler']},0.0,{row['speedup_vs_inorder']}",
+              flush=True)
 
     from benchmarks import roofline
     rows = roofline.run("single")
+    bench["roofline"] = rows or []
     if rows:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
     else:
         print("roofline_pending,0.0,run repro.launch.dryrun first", flush=True)
+
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"# wrote {BENCH_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -8,4 +8,5 @@ from .graph import (  # noqa: F401
 )
 from .criticality import criticality  # noqa: F401
 from .partition import GraphMemory, build_graph_memory  # noqa: F401
-from .overlay import OverlayConfig, SimResult, simulate  # noqa: F401
+from .overlay import OverlayConfig, SimResult, simulate, simulate_batch  # noqa: F401
+from .schedulers import REGISTRY as SCHEDULER_REGISTRY  # noqa: F401

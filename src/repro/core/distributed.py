@@ -9,6 +9,11 @@ the termination predicate is a psum-reduced flag.
 
 This is the production path for overlays larger than one device and the
 distribution showcase for the multi-pod dry-run (see tests + dryrun).
+
+Scheduling is delegated to :mod:`repro.core.schedulers` through the same
+protocol the single-device engine uses, so every registered policy (``ooo``,
+``inorder``, ``scan``, ``lru_flat``, and any future registration) runs under
+shard_map with no changes here.
 """
 from __future__ import annotations
 
@@ -16,11 +21,19 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from . import overlay
+from . import overlay, schedulers
 from .partition import GraphMemory
+
+# jax >= 0.6 exposes shard_map at the top level (check_vma kwarg); older
+# releases ship it under jax.experimental (check_rep kwarg).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SM_KW = {"check_vma": False}
+else:  # pragma: no cover - exercised on jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_KW = {"check_rep": False}
 
 
 def _shard_shift(axis_name: str, axis_idx: int, n: int):
@@ -55,10 +68,8 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
     Returns the same SimResult as overlay.simulate.
     """
     cfg = cfg or overlay.OverlayConfig()
+    sched = schedulers.get(cfg.scheduler)
     g = overlay.device_graph(gm)
-    fifo_depth = max(int(gm.local_counts.max(initial=1)), 1)
-
-    grid_spec = P(axis_x, axis_y)
 
     def spec_for(leaf):
         return P(axis_x, axis_y, *([None] * (leaf.ndim - 2)))
@@ -66,12 +77,12 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
     nsx = mesh.shape[axis_x]
     nsy = mesh.shape[axis_y]
 
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(_shard_map, mesh=mesh,
                        in_specs=(jax.tree.map(spec_for, dict(g)),),
                        out_specs=P(),
-                       check_vma=False)
+                       **_SM_KW)
     def run(gl):
-        state = overlay.init_state(gl, cfg, fifo_depth)
+        state = overlay.init_state(gl, cfg, scheduler=sched)
         nx_loc = gl["opcode"].shape[0]
         ny_loc = gl["opcode"].shape[1]
 
@@ -82,6 +93,7 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
 
         cycle = overlay.make_cycle_fn(
             gl, cfg,
+            scheduler=sched,
             shift_e=_shard_shift(axis_x, 0, nsx),
             shift_s=_shard_shift(axis_y, 1, nsy),
             all_reduce=all_reduce,
@@ -106,13 +118,4 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
         out["value"] = jax.lax.all_gather(out["value"], axis_x, axis=0, tiled=True)
         return out
 
-    final = run(dict(g))
-    value = np.asarray(final["value"]).reshape(gm.num_pes, gm.lmax)
-    return overlay.SimResult(
-        cycles=int(final["cycle"]),
-        done=bool(final["done"]),
-        values=value[gm.node_pe, gm.node_slot],
-        delivered=int(final["delivered"]),
-        deflections=int(final["deflections"]),
-        busy_cycles=int(final["busy_cycles"]),
-    )
+    return overlay._unpack_result(run(dict(g)), gm)

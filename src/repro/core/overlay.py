@@ -10,30 +10,37 @@ Timing model (faithful to §II):
   * one packet ejected per PE per cycle, one packet injected per PE per cycle
     (subject to NoC arbitration);
   * ALU latency 1 cycle (single-stage pipelined DSP), folded into fire;
-  * scheduler select latency: 1 cycle for the in-order FIFO pop, 2 cycles for
-    the hierarchical OuterLOD/InnerLOD pick ("deterministic 2-cycle process");
+  * scheduler select latency: policy-dependent exposed cycles (see
+    ``OverlayConfig.select_latency`` and each policy's ``sel_lat``);
   * Hoplite: 1 cycle per hop, deflection on contention.
 
-Schedulers:
-  * ``inorder`` — ready nodes queue in a FIFO in arrival order (FCFS), the
-    baseline of prior TDP designs. FIFO depth = worst case (all local nodes).
-  * ``ooo``     — packed RDY bit-flags + hierarchical leading-one detect; with
-    criticality-ordered local memory, the pick is the most critical ready
-    node. (the paper's contribution)
+Scheduling policy is pluggable: the cycle kernel only talks to the
+:class:`repro.core.schedulers.Scheduler` protocol, and the policy's state
+lives in the ``"sched"`` sub-dict of the simulation state pytree. See
+:mod:`repro.core.schedulers` for the registered policies (``ooo``,
+``inorder``, ``scan``, ``lru_flat``) and how to add one.
+
+Three execution engines share the same cycle body:
+  * :func:`simulate`          — single device, one config;
+  * :func:`simulate_batch`    — one device, a *stacked* config axis: the body
+    is vmapped so an N-scheduler x M-latency sweep is one XLA program
+    instead of N*M serial retraces (Fig. 1-style sweeps);
+  * :func:`repro.core.distributed.simulate_sharded` — shard_map over a mesh.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import bitvec, noc
+from . import bitvec, noc, schedulers
 from .graph import DIV_EPS, OP_ADD, OP_DIV, OP_MUL, OP_SUB
 from .partition import GraphMemory
+from .schedulers import row_gather as _row_gather
 
 Shift = Callable[[dict], dict]
 
@@ -55,15 +62,23 @@ class OverlayConfig:
     The paper's hierarchical LOD is a deterministic 2-cycle circuit — the
     point of determinism is that the pick pipelines behind the (>=1 cycle)
     fanout drain of the previous node, so its exposed cost equals the FIFO
-    pop's: 1 cycle. Default is therefore 1 for both schedulers; pass
-    ``select_latency=2`` to model an un-pipelined LOD (ablation), or a larger
-    value to model the naive non-deterministic memory scan the paper rejects.
+    pop's: 1 cycle. ``None`` defers to the policy's own default (1 for
+    ``ooo``/``inorder``/``lru_flat``; the RDY word count for ``scan``, which
+    models the un-pipelined memory sweep the paper rejects). Pass
+    ``select_latency=2`` to model an un-pipelined LOD (ablation), or larger
+    values to widen the exposed scan cost.
     """
 
-    scheduler: str = "ooo"           # "ooo" | "inorder"
-    select_latency: int | None = None  # exposed cycles; default 1
+    scheduler: str = "ooo"           # any name in schedulers.REGISTRY
+    select_latency: int | None = None  # exposed cycles; None = policy default
     eject_capacity: int = 1          # 2 == paper §II-C BRAM multipumping
     max_cycles: int = 1_000_000
+
+    def __post_init__(self):
+        if self.select_latency is not None and self.select_latency < 1:
+            raise ValueError(
+                f"select_latency must be >= 1 exposed cycle (or None for the "
+                f"policy default), got {self.select_latency}")
 
     @property
     def sel_lat(self) -> int:
@@ -90,51 +105,33 @@ def device_graph(gm: GraphMemory) -> DeviceGraph:
     )
 
 
-def _row_gather(arr, idx):
-    """arr: [nx, ny, L(, ...)], idx: [nx, ny] -> arr[x, y, idx[x, y]]."""
-    idxc = jnp.clip(idx, 0, arr.shape[2] - 1)
-    take = jnp.take_along_axis(arr, idxc.reshape(*idx.shape, 1, *(1,) * (arr.ndim - 3)), axis=2)
-    return take.reshape(idx.shape + arr.shape[3:])
+def _resolve(cfg: OverlayConfig, scheduler: schedulers.Scheduler | None):
+    return scheduler if scheduler is not None else schedulers.get(cfg.scheduler)
 
 
-def init_state(g: DeviceGraph, cfg: OverlayConfig, fifo_depth: int):
+def init_state(g: DeviceGraph, cfg: OverlayConfig,
+               scheduler: schedulers.Scheduler | None = None):
+    """Policy-agnostic simulation state. Scheduler state is namespaced under
+    ``state["sched"]``; the exposed select latency rides along as the
+    ``state["sel_lat"]`` scalar so the batched engine can vmap over it."""
+    sched = _resolve(cfg, scheduler)
     nx, ny, L = g["opcode"].shape
-    W = L // bitvec.FLAGS_PER_WORD
     is_input = (g["fanin"] == 0) & g["valid"]
-    has_fo = g["fo_count"] > 0
     computed = is_input
     value = jnp.where(is_input, g["init_value"], 0.0)
-
-    slots = jnp.arange(L, dtype=jnp.int32)
-    need_drain = is_input & has_fo  # inputs with fanouts are ready at cycle 0
-    # RDY bit image of need_drain.
-    bit = (jnp.uint32(1) << (31 - (slots % 32)).astype(jnp.uint32))
-    masks = jnp.where(need_drain, bit[None, None, :], jnp.uint32(0))
-    rdy = jnp.zeros((nx, ny, W), jnp.uint32)
-    rdy = rdy.at[:, :, :].set(
-        jax.lax.reduce(
-            masks.reshape(nx, ny, W, 32), jnp.uint32(0), jax.lax.bitwise_or, (3,)
-        )
-    )
-    # FIFO pre-loaded with ready inputs in ascending slot (== arrival) order.
-    order_key = jnp.where(need_drain, slots, L)
-    fifo_init = jnp.sort(order_key, axis=-1)[:, :, :fifo_depth]
-    fifo = jnp.where(fifo_init < L, fifo_init, -1).astype(jnp.int32)
-    fifo_size = need_drain.sum(axis=-1).astype(jnp.int32)
+    lat = sched.sel_lat(cfg, L // bitvec.FLAGS_PER_WORD)
 
     return dict(
         pending=g["fanin"].astype(jnp.int32),
         operands=jnp.zeros((nx, ny, L, 2), jnp.float32),
         computed=computed,
         value=value,
-        rdy=rdy if cfg.scheduler == "ooo" else jnp.zeros((nx, ny, W), jnp.uint32),
-        fifo=fifo if cfg.scheduler == "inorder" else jnp.full((nx, ny, 1), -1, jnp.int32),
-        fifo_head=jnp.zeros((nx, ny), jnp.int32),
-        fifo_size=fifo_size if cfg.scheduler == "inorder" else jnp.zeros((nx, ny), jnp.int32),
+        sched=sched.init(g, cfg),
         active=jnp.full((nx, ny), -1, jnp.int32),
         cursor=jnp.zeros((nx, ny), jnp.int32),
         cursor_end=jnp.zeros((nx, ny), jnp.int32),
-        sel_wait=jnp.full((nx, ny), cfg.sel_lat - 1, jnp.int32),
+        sel_lat=jnp.int32(lat),
+        sel_wait=jnp.full((nx, ny), lat - 1, jnp.int32),
         link_e=noc.empty_packets(nx, ny),
         link_s=noc.empty_packets(nx, ny),
         cycle=jnp.int32(0),
@@ -149,6 +146,7 @@ def make_cycle_fn(
     g: DeviceGraph,
     cfg: OverlayConfig,
     *,
+    scheduler: schedulers.Scheduler | None = None,
     shift_e: Shift = noc.roll_shift_e,
     shift_s: Shift = noc.roll_shift_s,
     all_reduce: Callable[[Any], Any] = lambda x: x,
@@ -160,6 +158,7 @@ def make_cycle_fn(
     termination predicates across shards (identity on a single device);
     ``x0``/``y0``/``global_ny`` supply global router coordinates when the PE
     grid is sharded (see core.distributed)."""
+    sched = _resolve(cfg, scheduler)
     nx, ny, L = g["opcode"].shape
     ny_i32 = jnp.int32(global_ny if global_ny is not None else ny)
 
@@ -187,15 +186,14 @@ def make_cycle_fn(
         cursor_end = s["cursor_end"]
         drained = (s["active"] >= 0) & (cursor >= cursor_end)
         active = jnp.where(drained, -1, s["active"])
-        sel_wait = jnp.where(drained, cfg.sel_lat - 1, s["sel_wait"])
+        sel_wait = jnp.where(drained, s["sel_lat"] - 1, s["sel_wait"])
 
         # ---- 4. apply ejected packets (eject_capacity per PE per cycle)
         ix = jnp.arange(nx)[:, None] * jnp.ones((1, ny), jnp.int32)
         iy = jnp.arange(ny)[None, :] * jnp.ones((nx, 1), jnp.int32)
         pending, operands = s["pending"], s["operands"]
         computed, value = s["computed"], s["value"]
-        rdy = s["rdy"]
-        fifo, fifo_head, fifo_size = s["fifo"], s["fifo_head"], s["fifo_size"]
+        sched_st = s["sched"]
         n_delivered = jnp.int32(0)
         n_fired = jnp.int32(0)
 
@@ -223,42 +221,17 @@ def make_cycle_fn(
             computed = computed.at[ix, iy, ej_slot].set(was_done | fired)
 
             ready_new = fired & (g["fo_count"][ix, iy, ej_slot] > 0)
-            if cfg.scheduler == "ooo":
-                rdy = bitvec.set_bit(
-                    rdy.reshape(nx * ny, -1),
-                    (ix * ny + iy).reshape(-1),
-                    ej_slot.reshape(-1),
-                    ready_new.reshape(-1),
-                ).reshape(nx, ny, -1)
-            else:
-                depth = fifo.shape[-1]
-                tail = (fifo_head + fifo_size) % depth
-                old_f = fifo[ix, iy, tail]
-                fifo = fifo.at[ix, iy, tail].set(jnp.where(ready_new, ej_slot, old_f))
-                fifo_size = fifo_size + ready_new.astype(jnp.int32)
+            sched_st = sched.on_ready(sched_st, ix, iy, ej_slot, ready_new)
             n_delivered = n_delivered + ej_v.sum().astype(jnp.int32)
             n_fired = n_fired + fired.sum().astype(jnp.int32)
 
         # ---- 5. scheduler: select the next node on idle PEs
         idle = active < 0
-        if cfg.scheduler == "ooo":
-            cand = bitvec.leading_one(rdy)          # most critical ready slot
-            have = cand >= 0
-        else:
-            cand = _row_gather(fifo, fifo_head)
-            have = fifo_size > 0
+        cand, have = sched.select(sched_st, idle)
         can_wait = idle & have & (sel_wait > 0)
         sel_wait = jnp.where(can_wait, sel_wait - 1, sel_wait)
         sel = idle & have & (sel_wait == 0) & ~can_wait
-        if cfg.scheduler == "ooo":
-            # clear the selected bit
-            word, mask = bitvec.slot_word_mask(jnp.clip(cand, 0, L - 1))
-            row = rdy[ix, iy, word]
-            rdy = rdy.at[ix, iy, word].set(jnp.where(sel, row & ~mask, row))
-        else:
-            depth = fifo.shape[-1]
-            fifo_head = jnp.where(sel, (fifo_head + 1) % depth, fifo_head)
-            fifo_size = jnp.where(sel, fifo_size - 1, fifo_size)
+        sched_st = sched.commit(sched_st, sel, cand)
 
         active = jnp.where(sel, cand, active)
         new_base = _row_gather(g["fo_base"], jnp.clip(cand, 0, L - 1))
@@ -268,15 +241,16 @@ def make_cycle_fn(
 
         # ---- 6. termination + stats
         all_computed = all_reduce((computed | ~g["valid"]).all())
-        no_ready = all_reduce((rdy == 0).all() & (fifo_size == 0).all())
+        no_ready = all_reduce(sched.empty(sched_st))
         no_active = all_reduce((active < 0).all())
         links_idle = all_reduce(noc.links_empty(link_e, link_s))
         done = all_computed & no_ready & no_active & links_idle
 
         return dict(
             pending=pending, operands=operands, computed=computed, value=value,
-            rdy=rdy, fifo=fifo, fifo_head=fifo_head, fifo_size=fifo_size,
-            active=active, cursor=cursor, cursor_end=cursor_end, sel_wait=sel_wait,
+            sched=sched_st,
+            active=active, cursor=cursor, cursor_end=cursor_end,
+            sel_lat=s["sel_lat"], sel_wait=sel_wait,
             link_e=link_e, link_s=link_s,
             cycle=s["cycle"] + 1,
             delivered=s["delivered"] + all_reduce(n_delivered).astype(jnp.int32),
@@ -299,9 +273,9 @@ class SimResult:
     busy_cycles: int
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "fifo_depth", "nx", "ny"))
-def _run_jit(g: dict, cfg: OverlayConfig, fifo_depth: int, nx: int, ny: int):
-    state = init_state(g, cfg, fifo_depth)
+@functools.partial(jax.jit, static_argnames=("cfg", "nx", "ny"))
+def _run_jit(g: dict, cfg: OverlayConfig, nx: int, ny: int):
+    state = init_state(g, cfg)
     cycle_fn = make_cycle_fn(g, cfg)
 
     def cond(s):
@@ -311,19 +285,100 @@ def _run_jit(g: dict, cfg: OverlayConfig, fifo_depth: int, nx: int, ny: int):
     return final
 
 
+def _unpack_result(final, gm: GraphMemory, b: int | None = None) -> SimResult:
+    pick = (lambda a: a[b]) if b is not None else (lambda a: a)
+    value = np.asarray(pick(final["value"])).reshape(gm.num_pes, gm.lmax)
+    return SimResult(
+        cycles=int(pick(final["cycle"])),
+        done=bool(pick(final["done"])),
+        values=value[gm.node_pe, gm.node_slot],
+        delivered=int(pick(final["delivered"])),
+        deflections=int(pick(final["deflections"])),
+        busy_cycles=int(pick(final["busy_cycles"])),
+    )
+
+
 def simulate(gm: GraphMemory, cfg: OverlayConfig | None = None) -> SimResult:
     """Run the overlay to completion on a single device."""
     cfg = cfg or OverlayConfig()
     g = device_graph(gm)
-    fifo_depth = max(int(gm.local_counts.max(initial=1)), 1)
-    final = _run_jit(dict(g), cfg, fifo_depth, gm.nx, gm.ny)
-    value = np.asarray(final["value"]).reshape(gm.num_pes, gm.lmax)
-    values = value[gm.node_pe, gm.node_slot]
-    return SimResult(
-        cycles=int(final["cycle"]),
-        done=bool(final["done"]),
-        values=values,
-        delivered=int(final["delivered"]),
-        deflections=int(final["deflections"]),
-        busy_cycles=int(final["busy_cycles"]),
-    )
+    final = _run_jit(dict(g), cfg, gm.nx, gm.ny)
+    return _unpack_result(final, gm)
+
+
+# ---------------------------------------------------------------------------
+# Batched sweep engine: one XLA program for an entire config sweep.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "names", "nx", "ny"))
+def _run_batch_jit(g: dict, cfg: OverlayConfig, names: tuple[str, ...],
+                   policy_ids, sel_lats, max_cycs, nx: int, ny: int):
+    sched = schedulers.BatchedScheduler(names)
+
+    def init_one(pid, lat):
+        s = init_state(g, cfg, scheduler=sched)
+        s["sched"]["policy_id"] = pid
+        s["sel_lat"] = lat
+        s["sel_wait"] = jnp.full_like(s["sel_wait"], lat - 1)
+        return s
+
+    state = jax.vmap(init_one)(policy_ids, sel_lats)
+    vcycle = jax.vmap(make_cycle_fn(g, cfg, scheduler=sched))
+
+    def body(s):
+        new = vcycle(s)
+        halted = s["done"] | (s["cycle"] >= max_cycs)
+
+        def freeze(old, upd):
+            d = halted.reshape(halted.shape + (1,) * (old.ndim - 1))
+            return jnp.where(d, old, upd)
+
+        # Batch elements that finished (or exhausted their own cycle budget)
+        # stop evolving, so each element's final cycle count and done flag
+        # are exactly what a solo run with the same config would report.
+        return jax.tree.map(freeze, s, new)
+
+    def cond(s):
+        return ((~s["done"]) & (s["cycle"] < max_cycs)).any()
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def simulate_batch(gm: GraphMemory,
+                   cfgs: Sequence[OverlayConfig]) -> list[SimResult]:
+    """Run one overlay graph under many configs as a single XLA program.
+
+    The cycle body is vmapped over a stacked config axis (policy id, exposed
+    select latency, cycle budget), so a Fig. 1-style N-scheduler x M-latency
+    sweep compiles once instead of retracing per config. Batch elements that
+    finish — or exhaust their own ``max_cycles`` — freeze in place, so every
+    returned result is identical to a serial :func:`simulate` call with the
+    same config. Sole requirement: all configs share ``eject_capacity`` (it
+    changes the traced NoC structure).
+    """
+    cfgs = list(cfgs)
+    if not cfgs:
+        return []
+    eject = {c.eject_capacity for c in cfgs}
+    if len(eject) != 1:
+        raise ValueError(f"simulate_batch needs a uniform eject_capacity, got {eject}")
+    names: list[str] = []
+    for c in cfgs:
+        schedulers.get(c.scheduler)  # validate early
+        if c.scheduler not in names:
+            names.append(c.scheduler)
+
+    base = dataclasses.replace(
+        cfgs[0], scheduler=names[0], select_latency=None,
+        max_cycles=max(c.max_cycles for c in cfgs))
+    g = device_graph(gm)
+    num_words = g["opcode"].shape[2] // bitvec.FLAGS_PER_WORD
+    policy_ids = jnp.asarray([names.index(c.scheduler) for c in cfgs], jnp.int32)
+    sel_lats = jnp.asarray(
+        [schedulers.get(c.scheduler).sel_lat(c, num_words) for c in cfgs],
+        jnp.int32)
+    max_cycs = jnp.asarray([c.max_cycles for c in cfgs], jnp.int32)
+
+    final = _run_batch_jit(dict(g), base, tuple(names), policy_ids, sel_lats,
+                           max_cycs, gm.nx, gm.ny)
+    return [_unpack_result(final, gm, b) for b in range(len(cfgs))]

@@ -1,0 +1,340 @@
+"""Pluggable ready-node scheduler policies for the overlay simulator.
+
+The paper's core contribution is a *scheduler policy* choice — FIFO FCFS vs.
+tagged leading-one-detect out-of-order — but richer policies (and the naive
+ones the paper rejects) are needed for ablations. This module extracts the
+policy behind a small protocol so the cycle kernel in
+:mod:`repro.core.overlay` stays policy-agnostic:
+
+  * ``init(g, cfg)``                      -> per-PE scheduler state pytree
+  * ``on_ready(st, ix, iy, slot, ready)`` -> mark ``slot`` ready where ``ready``
+  * ``select(st, idle)``                  -> (candidate slot, have) per PE
+  * ``commit(st, sel, cand)``             -> consume the candidate where ``sel``
+  * ``empty(st)``                         -> scalar bool: no node is queued
+  * ``sel_lat(cfg, num_words)``           -> exposed select latency (cycles)
+
+All hooks are pure jnp functions of [nx, ny, ...] arrays, so every policy
+works unchanged under ``jax.jit``, ``shard_map`` (state is local to a PE row)
+and ``jax.vmap`` (the batched sweep engine, see
+:func:`repro.core.overlay.simulate_batch`).
+
+Registered policies:
+
+  * ``ooo``      — packed RDY bit-flags + hierarchical OuterLOD/InnerLOD pick;
+                   with criticality-ordered local memory the pick is the most
+                   critical ready node (the paper's contribution).
+  * ``inorder``  — FIFO in arrival order (FCFS), the prior-TDP baseline.
+  * ``scan``     — the naive non-deterministic memory scan the paper rejects:
+                   a rotating pointer walks the RDY vector, so the exposed
+                   pick latency defaults to the word count of the scanned
+                   memory (configurable via ``cfg.select_latency``).
+  * ``lru_flat`` — single-level (flat) LOD with rotating least-recently-
+                   granted priority and no criticality exploitation: the
+                   1-cycle "fair arbiter" ablation point between ``scan`` and
+                   ``ooo``.
+
+Adding a policy: subclass :class:`Scheduler`, implement the hooks, decorate
+with :func:`register`. ``cfg.scheduler = "<name>"`` then selects it in
+``simulate``, ``simulate_sharded`` and ``simulate_batch`` — no cycle-kernel
+edits required.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bitvec
+
+_FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def row_gather(arr, idx):
+    """arr: [nx, ny, L(, ...)], idx: [nx, ny] -> arr[x, y, idx[x, y]]."""
+    idxc = jnp.clip(idx, 0, arr.shape[2] - 1)
+    take = jnp.take_along_axis(
+        arr, idxc.reshape(*idx.shape, 1, *(1,) * (arr.ndim - 3)), axis=2)
+    return take.reshape(idx.shape + arr.shape[3:])
+
+
+def _initial_ready(g):
+    """Inputs with fanouts are ready at cycle 0 (they must drain tokens)."""
+    is_input = (g["fanin"] == 0) & g["valid"]
+    return is_input & (g["fo_count"] > 0)
+
+
+def _rdy_image(need_drain):
+    """[nx, ny, L] bool -> packed [nx, ny, W] uint32 RDY bit image."""
+    nx, ny, L = need_drain.shape
+    W = L // bitvec.FLAGS_PER_WORD
+    slots = jnp.arange(L, dtype=jnp.int32)
+    bit = jnp.uint32(1) << (31 - (slots % 32)).astype(jnp.uint32)
+    masks = jnp.where(need_drain, bit[None, None, :], jnp.uint32(0))
+    return jax.lax.reduce(
+        masks.reshape(nx, ny, W, 32), jnp.uint32(0), jax.lax.bitwise_or, (3,))
+
+
+def _set_rdy_bit(rdy, ix, iy, slot, on):
+    nx, ny, _ = rdy.shape
+    return bitvec.set_bit(
+        rdy.reshape(nx * ny, -1),
+        (ix * ny + iy).reshape(-1),
+        slot.reshape(-1),
+        on.reshape(-1),
+    ).reshape(nx, ny, -1)
+
+
+def _clear_selected(rdy, sel, cand):
+    """Clear bit ``cand`` on PEs where ``sel``; L = W * 32."""
+    nx, ny, W = rdy.shape
+    L = W * bitvec.FLAGS_PER_WORD
+    ix = jnp.arange(nx)[:, None] * jnp.ones((1, ny), jnp.int32)
+    iy = jnp.arange(ny)[None, :] * jnp.ones((nx, 1), jnp.int32)
+    word, mask = bitvec.slot_word_mask(jnp.clip(cand, 0, L - 1))
+    row = rdy[ix, iy, word]
+    return rdy.at[ix, iy, word].set(jnp.where(sel, row & ~mask, row))
+
+
+def _mask_slots_ge(ptr, W):
+    """[nx, ny] slot pointer -> [nx, ny, W] uint32 mask of slots >= ptr.
+
+    Slot ``s`` lives at word s // 32, bit position 31 - s % 32, so within the
+    pointer's word the surviving bits are positions 0 .. 31 - ptr % 32.
+    """
+    word_ids = jnp.arange(W, dtype=jnp.int32)
+    pw = ptr // bitvec.FLAGS_PER_WORD
+    pb = (ptr % bitvec.FLAGS_PER_WORD).astype(jnp.uint32)
+    eq = (_FULL >> pb)[..., None]
+    return jnp.where(
+        word_ids > pw[..., None], _FULL,
+        jnp.where(word_ids < pw[..., None], jnp.uint32(0), eq))
+
+
+class Scheduler:
+    """Base policy. Subclasses override the hooks; see the module docstring."""
+
+    name: str = "?"
+    #: whether the policy exploits criticality-ordered local memory (used by
+    #: benchmarks to choose the matching GraphMemory layout).
+    wants_criticality_order: bool = True
+
+    def sel_lat(self, cfg, num_words: int) -> int:
+        """Exposed select latency in cycles (static, resolved at trace time)."""
+        return cfg.sel_lat
+
+    def init(self, g, cfg) -> dict:
+        raise NotImplementedError
+
+    def on_ready(self, st: dict, ix, iy, slot, ready) -> dict:
+        raise NotImplementedError
+
+    def select(self, st: dict, idle):
+        raise NotImplementedError
+
+    def commit(self, st: dict, sel, cand) -> dict:
+        raise NotImplementedError
+
+    def empty(self, st: dict):
+        raise NotImplementedError
+
+
+REGISTRY: dict[str, Scheduler] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the policy REGISTRY."""
+    inst = cls()
+    if inst.name in REGISTRY:
+        raise ValueError(f"duplicate scheduler name {inst.name!r}")
+    REGISTRY[inst.name] = inst
+    return cls
+
+
+def get(name: str) -> Scheduler:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; registered: {sorted(REGISTRY)}"
+        ) from None
+
+
+@register
+class OooScheduler(Scheduler):
+    """Packed RDY bit-flags + hierarchical leading-one detect (paper §II-B)."""
+
+    name = "ooo"
+    wants_criticality_order = True
+
+    def init(self, g, cfg):
+        return dict(rdy=_rdy_image(_initial_ready(g)))
+
+    def on_ready(self, st, ix, iy, slot, ready):
+        return dict(st, rdy=_set_rdy_bit(st["rdy"], ix, iy, slot, ready))
+
+    def select(self, st, idle):
+        cand = bitvec.leading_one(st["rdy"])   # most critical ready slot
+        return cand, cand >= 0
+
+    def commit(self, st, sel, cand):
+        return dict(st, rdy=_clear_selected(st["rdy"], sel, cand))
+
+    def empty(self, st):
+        return (st["rdy"] == 0).all()
+
+
+@register
+class InorderScheduler(Scheduler):
+    """FIFO in arrival order (FCFS) — the prior-TDP baseline. Depth is the
+    deadlock-free worst case: every local slot simultaneously ready."""
+
+    name = "inorder"
+    wants_criticality_order = False
+
+    def init(self, g, cfg):
+        nx, ny, L = g["opcode"].shape
+        need_drain = _initial_ready(g)
+        slots = jnp.arange(L, dtype=jnp.int32)
+        # FIFO pre-loaded with ready inputs in ascending slot (arrival) order.
+        order_key = jnp.where(need_drain, slots, L)
+        fifo_init = jnp.sort(order_key, axis=-1)
+        fifo = jnp.where(fifo_init < L, fifo_init, -1).astype(jnp.int32)
+        return dict(
+            fifo=fifo,
+            head=jnp.zeros((nx, ny), jnp.int32),
+            size=need_drain.sum(axis=-1).astype(jnp.int32),
+        )
+
+    def on_ready(self, st, ix, iy, slot, ready):
+        fifo, head, size = st["fifo"], st["head"], st["size"]
+        depth = fifo.shape[-1]
+        tail = (head + size) % depth
+        old = fifo[ix, iy, tail]
+        fifo = fifo.at[ix, iy, tail].set(jnp.where(ready, slot, old))
+        return dict(fifo=fifo, head=head, size=size + ready.astype(jnp.int32))
+
+    def select(self, st, idle):
+        return row_gather(st["fifo"], st["head"]), st["size"] > 0
+
+    def commit(self, st, sel, cand):
+        depth = st["fifo"].shape[-1]
+        head = jnp.where(sel, (st["head"] + 1) % depth, st["head"])
+        size = jnp.where(sel, st["size"] - 1, st["size"])
+        return dict(st, head=head, size=size)
+
+    def empty(self, st):
+        return (st["size"] == 0).all()
+
+
+class _RotatingRdyScheduler(Scheduler):
+    """Shared machinery: RDY bit vector scanned from a rotating pointer.
+
+    The pick is the first ready slot at/after the pointer (wrapping), i.e.
+    rotating / least-recently-granted priority — deliberately blind to the
+    criticality slot ordering the ``ooo`` policy exploits.
+    """
+
+    wants_criticality_order = False
+
+    def init(self, g, cfg):
+        nx, ny, _ = g["opcode"].shape
+        return dict(rdy=_rdy_image(_initial_ready(g)),
+                    ptr=jnp.zeros((nx, ny), jnp.int32))
+
+    def on_ready(self, st, ix, iy, slot, ready):
+        return dict(st, rdy=_set_rdy_bit(st["rdy"], ix, iy, slot, ready))
+
+    def select(self, st, idle):
+        rdy = st["rdy"]
+        hi = rdy & _mask_slots_ge(st["ptr"], rdy.shape[-1])
+        cand_hi = bitvec.leading_one(hi)
+        cand = jnp.where(cand_hi >= 0, cand_hi, bitvec.leading_one(rdy))
+        return cand, cand >= 0
+
+    def commit(self, st, sel, cand):
+        rdy = _clear_selected(st["rdy"], sel, cand)
+        L = rdy.shape[-1] * bitvec.FLAGS_PER_WORD
+        ptr = jnp.where(sel, (jnp.clip(cand, 0, L - 1) + 1) % L, st["ptr"])
+        return dict(rdy=rdy, ptr=ptr)
+
+    def empty(self, st):
+        return (st["rdy"] == 0).all()
+
+
+@register
+class ScanScheduler(_RotatingRdyScheduler):
+    """The naive memory scan the paper rejects: the pick walks graph memory
+    word by word, so its exposed latency defaults to the RDY word count
+    (non-deterministic in hardware; modeled as the worst-case full sweep).
+    Override with ``cfg.select_latency`` for a shallower exposed cost."""
+
+    name = "scan"
+
+    def sel_lat(self, cfg, num_words):
+        if cfg.select_latency is not None:
+            return cfg.select_latency
+        return max(1, num_words)
+
+
+@register
+class LruFlatScheduler(_RotatingRdyScheduler):
+    """Single-level (flat) LOD, rotating priority, 1-cycle exposed pick —
+    the fair-arbiter ablation: as fast as ``ooo`` per pick but unable to
+    exploit criticality ordering."""
+
+    name = "lru_flat"
+
+
+class BatchedScheduler(Scheduler):
+    """Composite policy for the vmapped sweep engine.
+
+    Maintains every member policy's state side by side plus a per-batch-
+    element ``policy_id``; ``select``/``empty`` dispatch on it with
+    ``jnp.select`` so one traced cycle body serves a whole
+    (scheduler x latency) sweep. Inactive substates still advance (their
+    updates are data-independent of the dispatch) but only the active
+    policy's state ever reaches ``select``/``empty``, so each batch element
+    is cycle-exact with the corresponding solo run.
+    """
+
+    name = "batched"
+    wants_criticality_order = True
+
+    def __init__(self, names: tuple[str, ...] = ()):
+        self.names = tuple(names)
+        self.policies = [get(n) for n in self.names]
+
+    def sel_lat(self, cfg, num_words):
+        # Placeholder: simulate_batch overwrites sel_wait/sel_lat per element.
+        return 1
+
+    def init(self, g, cfg):
+        st = {n: p.init(g, cfg) for n, p in zip(self.names, self.policies)}
+        st["policy_id"] = jnp.int32(0)
+        return st
+
+    def _preds(self, st):
+        return [st["policy_id"] == i for i in range(len(self.policies))]
+
+    def on_ready(self, st, ix, iy, slot, ready):
+        out = dict(st)
+        for n, p in zip(self.names, self.policies):
+            out[n] = p.on_ready(st[n], ix, iy, slot, ready)
+        return out
+
+    def select(self, st, idle):
+        cands, haves = zip(*(p.select(st[n], idle)
+                             for n, p in zip(self.names, self.policies)))
+        preds = self._preds(st)
+        cand = jnp.select(preds, list(cands), cands[0])
+        have = jnp.select(preds, list(haves), haves[0])
+        return cand, have
+
+    def commit(self, st, sel, cand):
+        out = dict(st)
+        for i, (n, p) in enumerate(zip(self.names, self.policies)):
+            out[n] = p.commit(st[n], sel & (st["policy_id"] == i), cand)
+        return out
+
+    def empty(self, st):
+        es = [p.empty(st[n]) for n, p in zip(self.names, self.policies)]
+        return jnp.select(self._preds(st), es, es[0])

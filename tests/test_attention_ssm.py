@@ -4,7 +4,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # optional dev dependency (pyproject [dev])
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.ref import flash_attention_ref
 from repro.models.attention import blockwise_attention

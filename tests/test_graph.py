@@ -1,7 +1,7 @@
 """Dataflow-graph IR: construction, validation, reference eval, criticality."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import workloads as wl
 from repro.core.criticality import asap_levels, criticality, height, slack

@@ -3,7 +3,7 @@ deadlock freedom, packet conservation — both schedulers, several grids.
 These are the system's core invariants (hypothesis-driven)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import workloads as wl
 from repro.core.graph import reference_evaluate

@@ -16,7 +16,7 @@ from repro.core.graph import reference_evaluate
 from repro.core.partition import build_graph_memory
 from repro.core.overlay import OverlayConfig, simulate
 from repro.core.distributed import simulate_sharded
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 g = wl.arrow_lu_graph(4, 8, 6, seed=2)
 ref = reference_evaluate(g)
 gm = build_graph_memory(g, 4, 8, criticality_order=True)

@@ -1,0 +1,138 @@
+"""Scheduler subsystem: registry contract, policy equivalence (every policy
+computes exactly the graph-level reference values), OoO superiority on
+criticality-heavy workloads, and batched-sweep == serial cycle exactness."""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core import workloads as wl
+from repro.core.graph import reference_evaluate
+from repro.core.overlay import OverlayConfig, simulate, simulate_batch
+from repro.core.partition import build_graph_memory
+from repro.core import schedulers
+
+ALL_POLICIES = sorted(schedulers.REGISTRY)
+
+
+def _run(g, nx, ny, sched, **kw):
+    policy = schedulers.get(sched)
+    gm = build_graph_memory(g, nx, ny,
+                            criticality_order=policy.wants_criticality_order)
+    cfg = OverlayConfig(scheduler=sched, max_cycles=500_000, **kw)
+    return simulate(gm, cfg)
+
+
+def test_registry_contract():
+    assert set(schedulers.REGISTRY) >= {"ooo", "inorder", "scan", "lru_flat"}
+    for name, policy in schedulers.REGISTRY.items():
+        assert policy.name == name
+        assert schedulers.get(name) is policy
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        schedulers.get("nope")
+
+
+@pytest.mark.parametrize("sched", ALL_POLICIES)
+def test_every_policy_matches_reference_sparse_lu(sched):
+    g = wl.sparse_lu_graph(10, 0.35, seed=7)
+    ref = reference_evaluate(g)
+    r = _run(g, 2, 2, sched)
+    assert r.done
+    np.testing.assert_array_equal(r.values, ref)  # bit-identical
+
+
+@given(st.integers(3, 7), st.integers(4, 10), st.integers(0, 1_000),
+       st.sampled_from(ALL_POLICIES))
+@settings(max_examples=12, deadline=None)
+def test_every_policy_matches_reference_layered(layers, width, seed, sched):
+    g = wl.layered_dag(layers, width, seed=seed)
+    ref = reference_evaluate(g)
+    r = _run(g, 2, 2, sched)
+    assert r.done
+    np.testing.assert_array_equal(r.values, ref)  # bit-identical
+
+
+def test_ooo_beats_inorder_on_arrow_lu():
+    g = wl.arrow_lu_graph(4, 8, 6, seed=2)
+    ooo = _run(g, 4, 4, "ooo")
+    ino = _run(g, 4, 4, "inorder")
+    assert ooo.done and ino.done
+    assert ooo.cycles <= ino.cycles
+
+
+def test_all_policies_terminate_on_16x16_grid():
+    g = wl.arrow_lu_graph(4, 6, 4, seed=1)
+    ref = reference_evaluate(g)
+    gm = build_graph_memory(g, 16, 16, criticality_order=True)
+    for sched in ALL_POLICIES:
+        r = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=500_000))
+        assert r.done, sched
+        np.testing.assert_array_equal(r.values, ref)
+
+
+def test_simulate_batch_matches_serial():
+    g = wl.arrow_lu_graph(3, 6, 4, seed=5)
+    gm = build_graph_memory(g, 4, 4, criticality_order=True)
+    cfgs = [OverlayConfig(scheduler=p, max_cycles=500_000) for p in ALL_POLICIES]
+    cfgs.append(OverlayConfig(scheduler="ooo", select_latency=4,
+                              max_cycles=500_000))
+    # heterogeneous cycle budget: must freeze at its OWN max_cycles, done=False
+    cfgs.append(OverlayConfig(scheduler="scan", max_cycles=100))
+    batch = simulate_batch(gm, cfgs)
+    assert len(batch) == len(cfgs)
+    for cfg, rb in zip(cfgs, batch):
+        rs = simulate(gm, cfg)
+        assert rb.done == rs.done
+        assert rb.cycles == rs.cycles, cfg
+        assert rb.delivered == rs.delivered
+        assert rb.busy_cycles == rs.busy_cycles
+        np.testing.assert_array_equal(rb.values, rs.values)
+
+
+def test_simulate_batch_rejects_mixed_eject_capacity():
+    g = wl.reduction_tree(16)
+    gm = build_graph_memory(g, 2, 2)
+    with pytest.raises(ValueError, match="eject_capacity"):
+        simulate_batch(gm, [OverlayConfig(eject_capacity=1),
+                            OverlayConfig(eject_capacity=2)])
+
+
+def test_simulate_batch_empty():
+    g = wl.reduction_tree(8)
+    gm = build_graph_memory(g, 2, 2)
+    assert simulate_batch(gm, []) == []
+
+
+def test_select_latency_zero_rejected():
+    # latency 0 would make the sel_wait countdown start at -1 and deadlock
+    with pytest.raises(ValueError, match="select_latency"):
+        OverlayConfig(select_latency=0)
+
+
+def test_scan_latency_exposed():
+    # scan's exposed pick cost defaults to the RDY word count and is
+    # configurable; a deeper exposed scan must cost cycles.
+    g = wl.reduction_tree(64)
+    fast = _run(g, 2, 2, "scan", select_latency=1)
+    slow = _run(g, 2, 2, "scan", select_latency=8)
+    assert fast.done and slow.done
+    assert slow.cycles > fast.cycles
+
+
+def test_sharded_runs_all_policies():
+    # 1x1 mesh exercises the shard_map code path on any backend.
+    import jax
+
+    from repro.core.distributed import simulate_sharded
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    g = wl.arrow_lu_graph(2, 5, 3, seed=4)
+    ref = reference_evaluate(g)
+    gm = build_graph_memory(g, 2, 2, criticality_order=True)
+    for sched in ALL_POLICIES:
+        cfg = OverlayConfig(scheduler=sched, max_cycles=500_000)
+        r1 = simulate(gm, cfg)
+        r2 = simulate_sharded(gm, mesh, cfg)
+        assert r2.done, sched
+        assert r1.cycles == r2.cycles, sched
+        np.testing.assert_array_equal(r2.values, ref)

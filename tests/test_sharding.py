@@ -65,7 +65,7 @@ from repro.configs import get_config
 from repro.distributed import sharding as shd
 from repro.optim import AdamW
 from repro.train import steps as tsteps
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 cfg = dataclasses.replace(get_config("qwen2-0.5b", smoke=True), fsdp=True)
 opt = AdamW(lr=1e-3)
 state_abs = jax.eval_shape(lambda k: tsteps.init_train_state(k, cfg, opt), jax.random.key(0))
