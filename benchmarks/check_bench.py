@@ -1,0 +1,88 @@
+"""CI gate: diff a fresh BENCH_overlay.json against the committed snapshot.
+
+Cycle counts are simulation *semantics* — for a cycle-accurate simulator they
+must not regress silently. This check fails (exit 1) when any tracked cycle
+count grew versus the baseline or a tracked row disappeared; cycle counts
+that *shrank* are reported as improvements (update the committed snapshot to
+lock them in). Wall-clock numbers are machine-dependent, so wall/throughput
+deltas are printed for the log but never block (shared CI runners).
+
+Usage:  python benchmarks/check_bench.py BASELINE.json FRESH.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _cycle_counts(bench: dict) -> dict[str, int]:
+    """Flatten every tracked cycle count to {metric_name: cycles}."""
+    out: dict[str, int] = {}
+    for row in bench.get("fig1", []):
+        for key, val in row.items():
+            if key.startswith("cycles_"):
+                out[f"{row['name']}.{key}"] = int(val)
+    sweep = bench.get("policy_sweep", {})
+    for row in sweep.get("schedulers", []):
+        out[f"policy_sweep.cycles_{row['scheduler']}"] = int(row["cycles"])
+    for row in bench.get("chunking", {}).get("rows", []):
+        for sched, cycles in row.get("cycles", {}).items():
+            out[f"{row['name']}.cycles_{sched}"] = int(cycles)
+    return out
+
+
+def _wall_times(bench: dict) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for row in bench.get("fig1", []):
+        out[f"{row['name']}.wall_s"] = float(row["wall_s"])
+        if "cycles_per_sec" in row:
+            out[f"{row['name']}.cycles_per_sec"] = float(row["cycles_per_sec"])
+    return out
+
+
+def main(baseline_path: str, fresh_path: str) -> int:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    base_cyc = _cycle_counts(baseline)
+    new_cyc = _cycle_counts(fresh)
+
+    regressions, improvements = [], []
+    for name, base in sorted(base_cyc.items()):
+        if name not in new_cyc:
+            regressions.append(f"{name}: missing from fresh run (was {base})")
+            continue
+        new = new_cyc[name]
+        if new > base:
+            regressions.append(f"{name}: {base} -> {new} (+{new - base})")
+        elif new < base:
+            improvements.append(f"{name}: {base} -> {new} ({new - base})")
+
+    for name in sorted(set(new_cyc) - set(base_cyc)):
+        print(f"NEW     {name} = {new_cyc[name]} (no baseline)")
+    for line in improvements:
+        print(f"BETTER  {line}")
+
+    # Wall-clock: informational only.
+    base_wall = _wall_times(baseline)
+    for name, new in sorted(_wall_times(fresh).items()):
+        base = base_wall.get(name)
+        delta = "" if base is None else f" (baseline {base})"
+        print(f"WALL    {name} = {new}{delta}")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} cycle-count regression(s):")
+        for line in regressions:
+            print(f"  {line}")
+        return 1
+    print(f"\nOK: {len(base_cyc)} tracked cycle counts, no regressions.")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -2,11 +2,14 @@
 
 Times (a) the jnp reference LOD scheduler step (select + clear) at the
 paper's geometry (256 PEs x 256 flag words == 8 BRAMs' worth of flags) and
-larger, and (b) every registered scheduler policy's full ``select`` +
-``commit`` step on randomized scheduler state — the simulator's actual hot
-spot per cycle. On TPU the Pallas kernel replaces the LOD inner loop;
-interpret-mode timing is not physical, so the CSV reports the compiled-jnp
-path.
+larger, (b) every registered scheduler policy's full ``select`` + ``commit``
+step on randomized scheduler state — the simulator's actual hot spot per
+cycle — and (c) the fused Pallas scheduler kernels (``schedule_step`` and
+the rotating-pointer variant) that ``OverlayConfig(use_pallas=True)`` routes
+the pick through. On this CPU container the Pallas rows run in interpret
+mode (flagged ``interpret: true`` in run.py's JSON snapshot): the timing is
+not physical TPU performance, but it tracks kernel-level regressions per PR
+and becomes real on a TPU backend.
 
 Output CSV: name,us_per_call,derived (derived = selects/s).
 """
@@ -93,6 +96,34 @@ def run():
                 "us_per_call": round(us, 2),
                 "derived": round(pes / (us * 1e-6), 0),
             })
+
+    # Fused Pallas scheduler kernels (the use_pallas=True select path).
+    from repro.kernels import ops
+    from repro.kernels.ops import _interpret
+
+    interp = _interpret()
+    for pes, words in [(256, 8), (256, 64)]:
+        bits = jnp.asarray(
+            rng.integers(0, 2**32, size=(pes, words), dtype=np.uint32))
+        gate = jnp.asarray(rng.random(pes) < 0.75)
+        ptr = jnp.asarray(
+            rng.integers(0, words * 32, size=pes, dtype=np.int32))
+        iters = 10 if interp else 50
+        us = _time(ops.schedule_step, bits, gate, iters=iters) * 1e6
+        rows.append({
+            "name": f"pallas_schedule_step_{pes}x{words}",
+            "us_per_call": round(us, 2),
+            "derived": round(pes / (us * 1e-6), 0),
+            "interpret": interp,
+        })
+        us = _time(ops.rotating_schedule_step, bits, ptr, gate,
+                   iters=iters) * 1e6
+        rows.append({
+            "name": f"pallas_rotating_step_{pes}x{words}",
+            "us_per_call": round(us, 2),
+            "derived": round(pes / (us * 1e-6), 0),
+            "interpret": interp,
+        })
     return rows
 
 

@@ -2,9 +2,12 @@
 """Benchmark driver.
 
   table1    — RDY-flag overhead / FIFO-elimination capacity model (Table I, §III)
-  kernels   — per-policy scheduler pick-rate microbench (LOD + select/commit)
-  fig1      — OoO vs in-order speedup vs graph size (paper Fig. 1)
+  kernels   — per-policy scheduler pick-rate microbench (LOD + select/commit
+              + the fused Pallas schedule_step / rotating variants)
+  fig1      — OoO vs in-order speedup vs graph size (paper Fig. 1), with
+              hot-timed simulated-cycles-per-second throughput per row
   sweep     — every registered policy on one graph via one batched program
+  chunking  — chunked-engine throughput: check_every=1 vs autotuned depth
   roofline  — per (arch x shape) roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]`` runs everything (fig1 sweeps to ~470K
@@ -62,6 +65,14 @@ def main() -> None:
     for row in bench["policy_sweep"]["schedulers"]:
         print(f"sweep_{row['scheduler']},0.0,{row['speedup_vs_inorder']}",
               flush=True)
+
+    # Chunked-engine before/after on one fig1 graph: hot-timed simulated
+    # cycles per second at check_every=1 vs the autotuned chunk depth.
+    bench["chunking"] = fig1_ooo_speedup.chunking_throughput()
+    for r in bench["chunking"]["rows"]:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    print(f"chunking_speedup_hot,0.0,{bench['chunking']['speedup_hot']}",
+          flush=True)
 
     from benchmarks import roofline
     rows = roofline.run("single")

@@ -56,6 +56,25 @@ def popcount(w):
     return (w * _U32(0x01010101)) >> 24
 
 
+def mask_slots_ge(ptr, W):
+    """[...] slot pointer -> [..., W] uint32 mask of slots >= ptr.
+
+    Slot ``s`` lives at word s // 32, bit position 31 - s % 32, so within the
+    pointer's word the surviving bits are positions 0 .. 31 - ptr % 32. This
+    is the rotating-priority window of the ``scan``/``lru_flat`` policies;
+    ``repro.kernels.lod`` implements the same mask inside the Pallas rotating
+    select kernel.
+    """
+    word_ids = jnp.arange(W, dtype=jnp.int32)
+    pw = ptr // FLAGS_PER_WORD
+    pb = (ptr % FLAGS_PER_WORD).astype(_U32)
+    full = _U32(0xFFFFFFFF)
+    eq = (full >> pb)[..., None]
+    return jnp.where(
+        word_ids > pw[..., None], full,
+        jnp.where(word_ids < pw[..., None], _U32(0), eq))
+
+
 def lod_word(w):
     """Leading-one position inside a word: 0 == MSB. Undefined for w == 0."""
     # clz(w) = 32 - popcount(smear(w)); leading-one slot offset == clz.

@@ -17,13 +17,14 @@ shard_map with no changes here.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from . import overlay, schedulers
+from . import bitvec, overlay, schedulers
 from .partition import GraphMemory
 
 # jax >= 0.6 exposes shard_map at the top level (check_vma kwarg); older
@@ -60,16 +61,33 @@ def _shard_shift(axis_name: str, axis_idx: int, n: int):
     return shift
 
 
+def _mk_all_reduce(axis_x: str, axis_y: str):
+    def all_reduce(x):
+        if x.dtype == jnp.bool_:  # logical AND across shards
+            return jax.lax.pmin(
+                x.astype(jnp.int32), (axis_x, axis_y)).astype(jnp.bool_)
+        return jax.lax.psum(x, (axis_x, axis_y))
+
+    return all_reduce
+
+
 def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | None = None,
                      axis_x: str = "data", axis_y: str = "model"):
     """Run the overlay with the PE grid sharded over ``mesh``.
 
     nx must divide by mesh.shape[axis_x], ny by mesh.shape[axis_y].
     Returns the same SimResult as overlay.simulate.
+
+    The stepping is chunked (``cfg.check_every``, autotuned when None): the
+    cycle body inside a chunk keeps every predicate and stat shard-local, and
+    the cross-shard psum/pmin runs once per chunk on the stacked done trace
+    and the stat deltas — two collectives per ``check_every`` cycles instead
+    of ~seven per cycle. ``check_every=1`` is the legacy per-cycle engine.
     """
     cfg = cfg or overlay.OverlayConfig()
     sched = schedulers.get(cfg.scheduler)
     g = overlay.device_graph(gm)
+    K = overlay.resolve_check_every(cfg, gm.nx, gm.ny, g["opcode"].shape[2])
 
     def spec_for(leaf):
         return P(axis_x, axis_y, *([None] * (leaf.ndim - 2)))
@@ -85,27 +103,32 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
         state = overlay.init_state(gl, cfg, scheduler=sched)
         nx_loc = gl["opcode"].shape[0]
         ny_loc = gl["opcode"].shape[1]
+        all_reduce = _mk_all_reduce(axis_x, axis_y)
 
-        def all_reduce(x):
-            if x.dtype == jnp.bool_:  # logical AND across shards
-                return jax.lax.pmin(x.astype(jnp.int32), (axis_x, axis_y)).astype(jnp.bool_)
-            return jax.lax.psum(x, (axis_x, axis_y))
-
-        cycle = overlay.make_cycle_fn(
-            gl, cfg,
-            scheduler=sched,
-            shift_e=_shard_shift(axis_x, 0, nsx),
-            shift_s=_shard_shift(axis_y, 1, nsy),
-            all_reduce=all_reduce,
-            x0=jax.lax.axis_index(axis_x) * nx_loc,
-            y0=jax.lax.axis_index(axis_y) * ny_loc,
-            global_ny=gm.ny,
-        )
+        def mk_cycle(reduce):
+            return overlay.make_cycle_fn(
+                gl, cfg,
+                scheduler=sched,
+                shift_e=_shard_shift(axis_x, 0, nsx),
+                shift_s=_shard_shift(axis_y, 1, nsy),
+                all_reduce=reduce,
+                x0=jax.lax.axis_index(axis_x) * nx_loc,
+                y0=jax.lax.axis_index(axis_y) * ny_loc,
+                global_ny=gm.ny,
+            )
 
         def cond(s):
             return (~s["done"]) & (s["cycle"] < cfg.max_cycles)
 
-        final = jax.lax.while_loop(cond, cycle, state)
+        if K > 1:
+            # Guard-free chunks while a whole chunk fits the budget; the
+            # per-cycle engine (with its per-cycle collectives) only runs
+            # the < K tail cycles.
+            chunk = overlay.make_chunk_fn(mk_cycle(lambda x: x), K, all_reduce)
+            state = jax.lax.while_loop(
+                lambda s: (~s["done"]) & (s["cycle"] + K <= cfg.max_cycles),
+                chunk, state)
+        final = jax.lax.while_loop(cond, mk_cycle(all_reduce), state)
         # return per-shard values gathered to replicated full grid
         out = {
             "value": jax.lax.all_gather(final["value"], axis_y, axis=1, tiled=True),
@@ -119,3 +142,126 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
         return out
 
     return overlay._unpack_result(run(dict(g)), gm)
+
+
+def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
+                           cfgs, axis_x: str = "data", axis_y: str = "model"):
+    """Multi-config sweep of a sharded overlay: vmap inside shard_map.
+
+    One XLA program runs every config of ``cfgs`` (scheduler / select latency
+    / cycle budget may vary; ``eject_capacity`` and ``use_pallas`` must be
+    uniform) with the PE grid tiled over ``mesh`` — the batched counterpart
+    of :func:`simulate_sharded` for overlays larger than one device, and the
+    sharded counterpart of :func:`repro.core.overlay.simulate_batch`. The
+    cycle body is vmapped over the stacked config axis; torus ppermutes and
+    the once-per-chunk psum/pmin become batched collectives. Results are
+    element-wise identical to serial :func:`simulate_sharded` runs.
+    """
+    cfgs = list(cfgs)
+    if not cfgs:
+        return []
+    eject = {c.eject_capacity for c in cfgs}
+    if len(eject) != 1:
+        raise ValueError(
+            f"simulate_batch_sharded needs a uniform eject_capacity, got {eject}")
+    pallas = {c.use_pallas for c in cfgs}
+    if len(pallas) != 1:
+        raise ValueError(
+            f"simulate_batch_sharded needs a uniform use_pallas, got {pallas}")
+    names: list[str] = []
+    for c in cfgs:
+        schedulers.get(c.scheduler)  # validate early
+        if c.scheduler not in names:
+            names.append(c.scheduler)
+
+    base = dataclasses.replace(
+        cfgs[0], scheduler=names[0], select_latency=None,
+        max_cycles=max(c.max_cycles for c in cfgs))
+    sched = schedulers.BatchedScheduler(tuple(names))
+    g = overlay.device_graph(gm)
+    L = g["opcode"].shape[2]
+    num_words = L // bitvec.FLAGS_PER_WORD
+    policy_ids = jnp.asarray([names.index(c.scheduler) for c in cfgs], jnp.int32)
+    sel_lats = jnp.asarray(
+        [schedulers.get(c.scheduler).sel_lat(c, num_words) for c in cfgs],
+        jnp.int32)
+    max_cycs = jnp.asarray([c.max_cycles for c in cfgs], jnp.int32)
+    K = overlay.resolve_check_every(base, gm.nx, gm.ny, L)
+
+    def spec_for(leaf):
+        return P(axis_x, axis_y, *([None] * (leaf.ndim - 2)))
+
+    nsx = mesh.shape[axis_x]
+    nsy = mesh.shape[axis_y]
+
+    @functools.partial(_shard_map, mesh=mesh,
+                       in_specs=(jax.tree.map(spec_for, dict(g)), P(), P(), P()),
+                       out_specs=P(),
+                       **_SM_KW)
+    def run(gl, policy_ids, sel_lats, max_cycs):
+        nx_loc = gl["opcode"].shape[0]
+        ny_loc = gl["opcode"].shape[1]
+
+        def init_one(pid, lat):
+            s = overlay.init_state(gl, base, scheduler=sched)
+            s["sched"]["policy_id"] = pid
+            s["sel_lat"] = lat
+            s["sel_wait"] = jnp.full_like(s["sel_wait"], lat - 1)
+            return s
+
+        state = jax.vmap(init_one)(policy_ids, sel_lats)
+        all_reduce = _mk_all_reduce(axis_x, axis_y)
+
+        def mk_cycle(reduce):
+            return overlay.make_cycle_fn(
+                gl, base,
+                scheduler=sched,
+                shift_e=_shard_shift(axis_x, 0, nsx),
+                shift_s=_shard_shift(axis_y, 1, nsy),
+                all_reduce=reduce,
+                x0=jax.lax.axis_index(axis_x) * nx_loc,
+                y0=jax.lax.axis_index(axis_y) * ny_loc,
+                global_ny=gm.ny,
+            )
+
+        def cond(s):
+            return ((~s["done"]) & (s["cycle"] < max_cycs)).any()
+
+        if K > 1:
+            vchunk = jax.vmap(
+                overlay.make_chunk_fn(mk_cycle(lambda x: x), K, all_reduce))
+
+            def chunk_cond(s):
+                running = (~s["done"]) & (s["cycle"] < max_cycs)
+                # An unfinished element at/near its budget is not a fixed
+                # point — it must force the exit to the per-cycle tail.
+                overruns = (~s["done"]) & (s["cycle"] + K > max_cycs)
+                return running.any() & ~overruns.any()
+
+            state = jax.lax.while_loop(chunk_cond, vchunk, state)
+
+        vcycle = jax.vmap(mk_cycle(all_reduce))
+
+        def freeze_body(s):
+            new = vcycle(s)
+            halted = s["done"] | (s["cycle"] >= max_cycs)
+
+            def freeze(old, upd):
+                d = halted.reshape(halted.shape + (1,) * (old.ndim - 1))
+                return jnp.where(d, old, upd)
+
+            return jax.tree.map(freeze, s, new)
+
+        final = jax.lax.while_loop(cond, freeze_body, state)
+        value = jax.lax.all_gather(final["value"], axis_y, axis=2, tiled=True)
+        return {
+            "value": jax.lax.all_gather(value, axis_x, axis=1, tiled=True),
+            "cycle": final["cycle"],
+            "done": final["done"],
+            "delivered": final["delivered"],
+            "deflections": final["deflections"],
+            "busy_cycles": final["busy_cycles"],
+        }
+
+    final = run(dict(g), policy_ids, sel_lats, max_cycs)
+    return [overlay._unpack_result(final, gm, b) for b in range(len(cfgs))]

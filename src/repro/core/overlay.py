@@ -15,17 +15,36 @@ Timing model (faithful to §II):
   * Hoplite: 1 cycle per hop, deflection on contention.
 
 Scheduling policy is pluggable: the cycle kernel only talks to the
-:class:`repro.core.schedulers.Scheduler` protocol, and the policy's state
-lives in the ``"sched"`` sub-dict of the simulation state pytree. See
+:class:`repro.core.schedulers.Scheduler` protocol (its fused per-cycle entry
+point is ``step`` — select + latency-gated commit, optionally backed by the
+Pallas kernels in :mod:`repro.kernels.lod` via
+``OverlayConfig(use_pallas=True)``), and the policy's state lives in the
+``"sched"`` sub-dict of the simulation state pytree. See
 :mod:`repro.core.schedulers` for the registered policies (``ooo``,
 ``inorder``, ``scan``, ``lru_flat``) and how to add one.
+
+Hot-path engineering (engine-level, never observable in results):
+  * *Fused eject application*: every eject port applies as one stacked
+    scatter per state array and fire detection stays in gathered per-port
+    form, so a cycle costs O(PEs), not O(PEs x slots); termination tracks a
+    remaining-nodes counter instead of reducing the computed plane.
+  * *Chunked stepping* (``OverlayConfig.check_every``; autotuned 8-32 from
+    graph size, ``1`` = the per-cycle reference engine): ``check_every``
+    cycles run back-to-back in a ``lax.scan`` per ``while_loop`` iteration,
+    so the termination predicate — and under ``shard_map`` the cross-shard
+    psum/pmin — runs once per chunk. A completed overlay is a fixed point of
+    the cycle body, so the exact completion cycle is recovered from the
+    chunk's per-cycle done trace (see :func:`make_chunk_fn`); results are
+    bit-identical for every ``check_every``.
 
 Three execution engines share the same cycle body:
   * :func:`simulate`          — single device, one config;
   * :func:`simulate_batch`    — one device, a *stacked* config axis: the body
     is vmapped so an N-scheduler x M-latency sweep is one XLA program
     instead of N*M serial retraces (Fig. 1-style sweeps);
-  * :func:`repro.core.distributed.simulate_sharded` — shard_map over a mesh.
+  * :func:`repro.core.distributed.simulate_sharded` — shard_map over a mesh
+    (and :func:`repro.core.distributed.simulate_batch_sharded`, the sharded
+    multi-config sweep: vmap inside shard_map).
 """
 from __future__ import annotations
 
@@ -67,22 +86,57 @@ class OverlayConfig:
     models the un-pipelined memory sweep the paper rejects). Pass
     ``select_latency=2`` to model an un-pipelined LOD (ablation), or larger
     values to widen the exposed scan cost.
+
+    ``check_every`` is an engine knob, not a model knob: the termination
+    predicate (and, sharded, its cross-shard reduction) is evaluated once per
+    ``check_every``-cycle chunk instead of once per cycle. Results are
+    bit-identical for every value — a completed overlay is a fixed point of
+    the cycle function, so the exact completion cycle is recovered from the
+    per-cycle done trace recorded inside the chunk. ``None`` autotunes from
+    the graph size (8–32); ``1`` forces the legacy cycle-by-cycle reference
+    engine.
+
+    ``use_pallas`` routes the scheduler pick through the fused Pallas LOD
+    kernels in :mod:`repro.kernels.lod` (one VMEM round-trip per pick) for
+    policies that support it; off by default so CPU CI runs the pure-jnp
+    reference path. On non-TPU backends the kernels run in interpret mode.
     """
 
     scheduler: str = "ooo"           # any name in schedulers.REGISTRY
     select_latency: int | None = None  # exposed cycles; None = policy default
     eject_capacity: int = 1          # 2 == paper §II-C BRAM multipumping
     max_cycles: int = 1_000_000
+    check_every: int | None = None   # cycles per termination check; None=auto
+    use_pallas: bool = False         # fused Pallas select/commit kernels
 
     def __post_init__(self):
         if self.select_latency is not None and self.select_latency < 1:
             raise ValueError(
                 f"select_latency must be >= 1 exposed cycle (or None for the "
                 f"policy default), got {self.select_latency}")
+        if self.check_every is not None and self.check_every < 1:
+            raise ValueError(
+                f"check_every must be >= 1 cycle per termination check (or "
+                f"None to autotune), got {self.check_every}")
 
     @property
     def sel_lat(self) -> int:
         return 1 if self.select_latency is None else self.select_latency
+
+
+def resolve_check_every(cfg: OverlayConfig, nx: int, ny: int, L: int) -> int:
+    """Static chunk length for the stepping engine. Any value is cycle-exact;
+    the autotune only trades per-chunk overhead against wasted tail cycles
+    (up to K-1 extra cycle evaluations after completion), so it grows with
+    the slot count — bigger graphs run long enough to amortize deep chunks."""
+    if cfg.check_every is not None:
+        return cfg.check_every
+    slots = nx * ny * L
+    if slots <= 4_096:
+        return 8
+    if slots <= 65_536:
+        return 16
+    return 32
 
 
 class DeviceGraph(dict):
@@ -126,6 +180,7 @@ def init_state(g: DeviceGraph, cfg: OverlayConfig,
         operands=jnp.zeros((nx, ny, L, 2), jnp.float32),
         computed=computed,
         value=value,
+        remaining=(g["valid"] & ~computed).sum().astype(jnp.int32),
         sched=sched.init(g, cfg),
         active=jnp.full((nx, ny), -1, jnp.int32),
         cursor=jnp.zeros((nx, ny), jnp.int32),
@@ -188,50 +243,77 @@ def make_cycle_fn(
         active = jnp.where(drained, -1, s["active"])
         sel_wait = jnp.where(drained, s["sel_lat"] - 1, s["sel_wait"])
 
-        # ---- 4. apply ejected packets (eject_capacity per PE per cycle)
+        # ---- 4. apply ejected packets, fused across the eject ports.
+        # All eject ports apply as ONE stacked [E, nx, ny] scatter per array
+        # instead of ``eject_capacity`` sequential full-grid gather/scatter
+        # rounds, and fire detection stays in gathered [E, nx, ny] form, so
+        # the per-cycle cost is O(PEs), not O(PEs x slots). Order-free
+        # exactness relies on the graph-memory invariants that each
+        # (pe, slot, opidx) operand cell receives exactly one packet over the
+        # whole run (fanin semantics) and each slot fires at most once, so
+        # scatter-*add* into the zero-initialized cells equals the
+        # sequential writes of the per-port loop this replaces.
         ix = jnp.arange(nx)[:, None] * jnp.ones((1, ny), jnp.int32)
         iy = jnp.arange(ny)[None, :] * jnp.ones((nx, 1), jnp.int32)
-        pending, operands = s["pending"], s["operands"]
-        computed, value = s["computed"], s["value"]
         sched_st = s["sched"]
-        n_delivered = jnp.int32(0)
-        n_fired = jnp.int32(0)
 
-        for eject in ejects:
-            ej_v = eject["valid"]
-            ej_slot = jnp.clip(eject["dst_slot"], 0, L - 1)
-            ej_op = jnp.clip(eject["opidx"], 0, 1)
-            old_opnd = operands[ix, iy, ej_slot, ej_op]
-            operands = operands.at[ix, iy, ej_slot, ej_op].set(
-                jnp.where(ej_v, eject["value"], old_opnd)
-            )
-            old_pend = pending[ix, iy, ej_slot]
-            new_pend = jnp.where(ej_v, old_pend - 1, old_pend)
-            pending = pending.at[ix, iy, ej_slot].set(new_pend)
+        ej_valid = jnp.stack([e["valid"] for e in ejects])          # [E,nx,ny]
+        ej_slot = jnp.clip(jnp.stack([e["dst_slot"] for e in ejects]), 0, L - 1)
+        ej_op = jnp.clip(jnp.stack([e["opidx"] for e in ejects]), 0, 1)
+        ej_val = jnp.stack([e["value"] for e in ejects])
 
-            was_done = computed[ix, iy, ej_slot]
-            fired = ej_v & (new_pend == 0) & ~was_done
-            a = operands[ix, iy, ej_slot, 0]
-            b = operands[ix, iy, ej_slot, 1]
-            opc = g["opcode"][ix, iy, ej_slot]
-            fval = alu(opc, a, b)
-            value = value.at[ix, iy, ej_slot].set(
-                jnp.where(fired, fval, value[ix, iy, ej_slot])
-            )
-            computed = computed.at[ix, iy, ej_slot].set(was_done | fired)
+        # With one eject port the (pe, slot) scatter indices are unique and
+        # iterate in row-major order — tell XLA so it takes the fast path.
+        E = len(ejects)
+        hints = dict(mode="promise_in_bounds",
+                     unique_indices=E == 1, indices_are_sorted=E == 1)
+        operands = s["operands"].at[ix[None], iy[None], ej_slot, ej_op].add(
+            jnp.where(ej_valid, ej_val, 0.0), **hints)
+        pending = s["pending"].at[ix[None], iy[None], ej_slot].add(
+            -ej_valid.astype(jnp.int32), **hints)
 
-            ready_new = fired & (g["fo_count"][ix, iy, ej_slot] > 0)
-            sched_st = sched.on_ready(sched_st, ix, iy, ej_slot, ready_new)
-            n_delivered = n_delivered + ej_v.sum().astype(jnp.int32)
-            n_fired = n_fired + fired.sum().astype(jnp.int32)
+        # A slot fires the cycle a delivery drops its pending count to zero.
+        # Gathered at each port's own target slot; when two ports hit the
+        # same slot in one cycle both see the post-decrement count, so the
+        # first port claims the fire (same single fire, same operands and
+        # value, as the sequential loop).
+        new_pend = jnp.stack([_row_gather(pending, ej_slot[e])
+                              for e in range(E)])
+        was_done = jnp.stack([_row_gather(s["computed"], ej_slot[e])
+                              for e in range(E)])
+        fired = ej_valid & (new_pend == 0) & ~was_done
+        for e in range(1, E):
+            for prev in range(e):
+                dup = fired[prev] & (ej_slot[prev] == ej_slot[e])
+                fired = fired.at[e].set(fired[e] & ~dup)
 
-        # ---- 5. scheduler: select the next node on idle PEs
+        opnds = jnp.stack([_row_gather(operands, ej_slot[e])
+                           for e in range(E)])                 # [E,nx,ny,2]
+        opc = jnp.stack([_row_gather(g["opcode"], ej_slot[e])
+                         for e in range(E)])
+        fval = alu(opc, opnds[..., 0], opnds[..., 1])
+        value = s["value"].at[ix[None], iy[None], ej_slot].add(
+            jnp.where(fired, fval, 0.0), **hints)
+        computed = s["computed"].at[ix[None], iy[None], ej_slot].max(
+            fired, mode="promise_in_bounds")
+
+        # Enqueue fired nodes in eject-port order (per-PE FIFO arrival
+        # semantics are exactly the sequential loop's).
+        for e in range(E):
+            ready_e = fired[e] & (_row_gather(g["fo_count"], ej_slot[e]) > 0)
+            sched_st = sched.on_ready(sched_st, ix, iy, ej_slot[e], ready_e)
+
+        n_delivered = ej_valid.sum().astype(jnp.int32)
+        n_fired = fired.sum().astype(jnp.int32)
+
+        # ---- 5. scheduler: select (and consume) the next node on idle PEs
         idle = active < 0
-        cand, have = sched.select(sched_st, idle)
+        gate = idle & (sel_wait == 0)
+        cand, have, sched_st = sched.step(sched_st, idle, gate,
+                                          use_pallas=cfg.use_pallas)
         can_wait = idle & have & (sel_wait > 0)
         sel_wait = jnp.where(can_wait, sel_wait - 1, sel_wait)
-        sel = idle & have & (sel_wait == 0) & ~can_wait
-        sched_st = sched.commit(sched_st, sel, cand)
+        sel = gate & have
 
         active = jnp.where(sel, cand, active)
         new_base = _row_gather(g["fo_base"], jnp.clip(cand, 0, L - 1))
@@ -239,8 +321,11 @@ def make_cycle_fn(
         cursor = jnp.where(sel, new_base, cursor)
         cursor_end = jnp.where(sel, new_base + new_cnt, cursor_end)
 
-        # ---- 6. termination + stats
-        all_computed = all_reduce((computed | ~g["valid"]).all())
+        # ---- 6. termination + stats. ``remaining`` counts local uncomputed
+        # valid nodes so the all-computed predicate is O(1) per cycle instead
+        # of an O(slots) reduction over the computed plane.
+        remaining = s["remaining"] - n_fired
+        all_computed = all_reduce(remaining == 0)
         no_ready = all_reduce(sched.empty(sched_st))
         no_active = all_reduce((active < 0).all())
         links_idle = all_reduce(noc.links_empty(link_e, link_s))
@@ -248,6 +333,7 @@ def make_cycle_fn(
 
         return dict(
             pending=pending, operands=operands, computed=computed, value=value,
+            remaining=remaining,
             sched=sched_st,
             active=active, cursor=cursor, cursor_end=cursor_end,
             sel_lat=s["sel_lat"], sel_wait=sel_wait,
@@ -261,6 +347,60 @@ def make_cycle_fn(
         )
 
     return cycle
+
+
+_STAT_KEYS = ("delivered", "deflections", "busy_cycles")
+
+
+def make_chunk_fn(cycle_fn, check_every: int,
+                  all_reduce: Callable[[Any], Any] = lambda x: x):
+    """Wrap ``check_every`` cycles of ``cycle_fn`` into one chunk step.
+
+    ``cycle_fn`` must be built with the *identity* all_reduce: inside the
+    chunk every termination predicate and stat increment stays shard-local,
+    and the cross-shard reduction (``all_reduce``) runs once per chunk — on
+    the stacked per-cycle done trace and on the chunk's stat deltas — instead
+    of ~7 collectives per cycle.
+
+    The chunk body is deliberately guard-free (no per-cycle freeze, no
+    branch): a completed overlay is a *fixed point* of ``cycle_fn`` (no
+    ready nodes, no active fanout drains, empty links), so cycles simulated
+    past completion change nothing but the cycle counter, and the counter is
+    repaired afterwards from the first globally-done entry of the per-cycle
+    trace. The ``max_cycles`` budget is enforced by the *caller*: only enter
+    a chunk when every still-running element has at least ``check_every``
+    cycles of budget left, and finish the tail with the per-cycle engine
+    (see ``_run_jit``). That keeps the hot path exactly ``check_every``
+    back-to-back cycle evaluations.
+    """
+
+    def chunk(s):
+        start_stats = jnp.stack([s[k] for k in _STAT_KEYS])
+        start_cycle = s["cycle"]
+        start_done = s["done"]  # already-finished batch elements re-enter
+
+        def body(c, _):
+            c = cycle_fn(c)
+            return c, c["done"]
+
+        s2, done_trace = jax.lax.scan(body, s, None, length=check_every)
+
+        done_trace = all_reduce(done_trace)            # one collective
+        any_done = done_trace.any()
+        first = jnp.argmax(done_trace).astype(jnp.int32)
+        cycle = jnp.where(
+            start_done, start_cycle,
+            jnp.where(any_done, start_cycle + first + 1, s2["cycle"]))
+
+        end_stats = jnp.stack([s2[k] for k in _STAT_KEYS])
+        stats = start_stats + all_reduce(end_stats - start_stats)
+
+        out = dict(s2, done=any_done, cycle=cycle)
+        for i, k in enumerate(_STAT_KEYS):
+            out[k] = stats[i]
+        return out
+
+    return chunk
 
 
 @dataclasses.dataclass
@@ -277,10 +417,19 @@ class SimResult:
 def _run_jit(g: dict, cfg: OverlayConfig, nx: int, ny: int):
     state = init_state(g, cfg)
     cycle_fn = make_cycle_fn(g, cfg)
+    K = resolve_check_every(cfg, nx, ny, g["opcode"].shape[2])
 
     def cond(s):
         return (~s["done"]) & (s["cycle"] < cfg.max_cycles)
 
+    if K > 1:
+        # Chunked phase: K back-to-back cycles per termination check, entered
+        # only while a full chunk fits the budget (so no freeze guard is
+        # needed inside); the per-cycle loop below finishes the < K tail.
+        chunk = make_chunk_fn(cycle_fn, K)
+        state = jax.lax.while_loop(
+            lambda s: (~s["done"]) & (s["cycle"] + K <= cfg.max_cycles),
+            chunk, state)
     final = jax.lax.while_loop(cond, cycle_fn, state)
     return final
 
@@ -323,9 +472,15 @@ def _run_batch_jit(g: dict, cfg: OverlayConfig, names: tuple[str, ...],
         return s
 
     state = jax.vmap(init_one)(policy_ids, sel_lats)
-    vcycle = jax.vmap(make_cycle_fn(g, cfg, scheduler=sched))
+    cycle_fn = make_cycle_fn(g, cfg, scheduler=sched)
+    nx_, ny_, L = g["opcode"].shape
+    K = resolve_check_every(cfg, nx_, ny_, L)
+    vcycle = jax.vmap(cycle_fn)
 
-    def body(s):
+    def cond(s):
+        return ((~s["done"]) & (s["cycle"] < max_cycs)).any()
+
+    def freeze_body(s):
         new = vcycle(s)
         halted = s["done"] | (s["cycle"] >= max_cycs)
 
@@ -338,10 +493,25 @@ def _run_batch_jit(g: dict, cfg: OverlayConfig, names: tuple[str, ...],
         # are exactly what a solo run with the same config would report.
         return jax.tree.map(freeze, s, new)
 
-    def cond(s):
-        return ((~s["done"]) & (s["cycle"] < max_cycs)).any()
+    if K > 1:
+        # Chunked phase, vmapped whole: guard-free K-cycle chunks run while
+        # every still-running element has a full chunk of budget left
+        # (completed elements are fixed points and get their cycle counter
+        # repaired from their own done trace — see make_chunk_fn); the
+        # per-cycle freeze body then finishes the heterogeneous tail.
+        vchunk = jax.vmap(make_chunk_fn(cycle_fn, K))
 
-    return jax.lax.while_loop(cond, body, state)
+        def chunk_cond(s):
+            running = (~s["done"]) & (s["cycle"] < max_cycs)
+            # Any unfinished element without a full chunk of budget left —
+            # including one already AT its budget, which is not a fixed
+            # point — must force the exit to the freezing per-cycle tail.
+            overruns = (~s["done"]) & (s["cycle"] + K > max_cycs)
+            return running.any() & ~overruns.any()
+
+        state = jax.lax.while_loop(chunk_cond, vchunk, state)
+
+    return jax.lax.while_loop(cond, freeze_body, state)
 
 
 def simulate_batch(gm: GraphMemory,
@@ -362,6 +532,9 @@ def simulate_batch(gm: GraphMemory,
     eject = {c.eject_capacity for c in cfgs}
     if len(eject) != 1:
         raise ValueError(f"simulate_batch needs a uniform eject_capacity, got {eject}")
+    pallas = {c.use_pallas for c in cfgs}
+    if len(pallas) != 1:
+        raise ValueError(f"simulate_batch needs a uniform use_pallas, got {pallas}")
     names: list[str] = []
     for c in cfgs:
         schedulers.get(c.scheduler)  # validate early

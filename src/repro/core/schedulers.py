@@ -13,6 +13,13 @@ policy behind a small protocol so the cycle kernel in
   * ``empty(st)``                         -> scalar bool: no node is queued
   * ``sel_lat(cfg, num_words)``           -> exposed select latency (cycles)
 
+The cycle kernel drives one fused entry point per cycle,
+``step(st, idle, gate, use_pallas=...) -> (cand, have, st)``; the base class
+composes ``select`` + ``commit`` so policies only implement the hooks above,
+while ``ooo``/``scan``/``lru_flat`` override it to route the pick + RDY
+clear through the fused Pallas kernels (:mod:`repro.kernels.lod`) when
+``OverlayConfig(use_pallas=True)``.
+
 All hooks are pure jnp functions of [nx, ny, ...] arrays, so every policy
 works unchanged under ``jax.jit``, ``shard_map`` (state is local to a PE row)
 and ``jax.vmap`` (the batched sweep engine, see
@@ -44,8 +51,6 @@ import jax
 import jax.numpy as jnp
 
 from . import bitvec
-
-_FULL = jnp.uint32(0xFFFFFFFF)
 
 
 def row_gather(arr, idx):
@@ -94,21 +99,6 @@ def _clear_selected(rdy, sel, cand):
     return rdy.at[ix, iy, word].set(jnp.where(sel, row & ~mask, row))
 
 
-def _mask_slots_ge(ptr, W):
-    """[nx, ny] slot pointer -> [nx, ny, W] uint32 mask of slots >= ptr.
-
-    Slot ``s`` lives at word s // 32, bit position 31 - s % 32, so within the
-    pointer's word the surviving bits are positions 0 .. 31 - ptr % 32.
-    """
-    word_ids = jnp.arange(W, dtype=jnp.int32)
-    pw = ptr // bitvec.FLAGS_PER_WORD
-    pb = (ptr % bitvec.FLAGS_PER_WORD).astype(jnp.uint32)
-    eq = (_FULL >> pb)[..., None]
-    return jnp.where(
-        word_ids > pw[..., None], _FULL,
-        jnp.where(word_ids < pw[..., None], jnp.uint32(0), eq))
-
-
 class Scheduler:
     """Base policy. Subclasses override the hooks; see the module docstring."""
 
@@ -135,6 +125,19 @@ class Scheduler:
 
     def empty(self, st: dict):
         raise NotImplementedError
+
+    def step(self, st: dict, idle, gate, *, use_pallas: bool = False):
+        """Fused select + commit: the cycle kernel's per-cycle entry point.
+
+        ``gate`` marks PEs whose pick is consumed this cycle (idle and past
+        the exposed select latency); the candidate is committed where
+        ``gate & have``. The default composes the two hooks, so policies only
+        implementing the five base hooks work unchanged; policies with a
+        fused Pallas kernel override this (``use_pallas=True``) to do the
+        pick and the RDY clear in one VMEM round-trip.
+        """
+        cand, have = self.select(st, idle)
+        return cand, have, self.commit(st, gate & have, cand)
 
 
 REGISTRY: dict[str, Scheduler] = {}
@@ -180,6 +183,17 @@ class OooScheduler(Scheduler):
 
     def empty(self, st):
         return (st["rdy"] == 0).all()
+
+    def step(self, st, idle, gate, *, use_pallas=False):
+        if not use_pallas:
+            return super().step(st, idle, gate, use_pallas=False)
+        from repro.kernels import ops  # lazy: keep core importable sans Pallas
+
+        nx, ny, W = st["rdy"].shape
+        slot, newbits = ops.schedule_step(
+            st["rdy"].reshape(nx * ny, W), gate=gate.reshape(nx * ny))
+        cand = slot.reshape(nx, ny)
+        return cand, cand >= 0, dict(st, rdy=newbits.reshape(nx, ny, W))
 
 
 @register
@@ -245,7 +259,7 @@ class _RotatingRdyScheduler(Scheduler):
 
     def select(self, st, idle):
         rdy = st["rdy"]
-        hi = rdy & _mask_slots_ge(st["ptr"], rdy.shape[-1])
+        hi = rdy & bitvec.mask_slots_ge(st["ptr"], rdy.shape[-1])
         cand_hi = bitvec.leading_one(hi)
         cand = jnp.where(cand_hi >= 0, cand_hi, bitvec.leading_one(rdy))
         return cand, cand >= 0
@@ -258,6 +272,22 @@ class _RotatingRdyScheduler(Scheduler):
 
     def empty(self, st):
         return (st["rdy"] == 0).all()
+
+    def step(self, st, idle, gate, *, use_pallas=False):
+        if not use_pallas:
+            return super().step(st, idle, gate, use_pallas=False)
+        from repro.kernels import ops  # lazy: keep core importable sans Pallas
+
+        nx, ny, W = st["rdy"].shape
+        L = W * bitvec.FLAGS_PER_WORD
+        slot, newbits = ops.rotating_schedule_step(
+            st["rdy"].reshape(nx * ny, W), st["ptr"].reshape(nx * ny),
+            gate.reshape(nx * ny))
+        cand = slot.reshape(nx, ny)
+        have = cand >= 0
+        sel = gate & have
+        ptr = jnp.where(sel, (cand + 1) % L, st["ptr"])
+        return cand, have, dict(rdy=newbits.reshape(nx, ny, W), ptr=ptr)
 
 
 @register
@@ -315,6 +345,13 @@ class BatchedScheduler(Scheduler):
     def _preds(self, st):
         return [st["policy_id"] == i for i in range(len(self.policies))]
 
+    @property
+    def _solo(self):
+        """Single-policy sweep: the dispatch predicate is statically true for
+        member 0 and statically false for everyone else, so the per-policy
+        masking and ``jnp.select`` dispatch are pruned at trace time."""
+        return len(self.policies) == 1
+
     def on_ready(self, st, ix, iy, slot, ready):
         out = dict(st)
         for n, p in zip(self.names, self.policies):
@@ -322,6 +359,8 @@ class BatchedScheduler(Scheduler):
         return out
 
     def select(self, st, idle):
+        if self._solo:
+            return self.policies[0].select(st[self.names[0]], idle)
         cands, haves = zip(*(p.select(st[n], idle)
                              for n, p in zip(self.names, self.policies)))
         preds = self._preds(st)
@@ -331,10 +370,36 @@ class BatchedScheduler(Scheduler):
 
     def commit(self, st, sel, cand):
         out = dict(st)
+        if self._solo:
+            n = self.names[0]
+            out[n] = self.policies[0].commit(st[n], sel, cand)
+            return out
         for i, (n, p) in enumerate(zip(self.names, self.policies)):
             out[n] = p.commit(st[n], sel & (st["policy_id"] == i), cand)
         return out
 
     def empty(self, st):
+        if self._solo:
+            return self.policies[0].empty(st[self.names[0]])
         es = [p.empty(st[n]) for n, p in zip(self.names, self.policies)]
         return jnp.select(self._preds(st), es, es[0])
+
+    def step(self, st, idle, gate, *, use_pallas=False):
+        out = dict(st)
+        if self._solo:
+            n = self.names[0]
+            cand, have, out[n] = self.policies[0].step(
+                st[n], idle, gate, use_pallas=use_pallas)
+            return cand, have, out
+        # Each member commits its own candidate under its dispatch predicate;
+        # where the predicate holds, the member's candidate IS the dispatched
+        # candidate, so this equals select-then-masked-commit exactly.
+        preds = self._preds(st)
+        cands, haves = [], []
+        for i, (n, p) in enumerate(zip(self.names, self.policies)):
+            c, h, out[n] = p.step(st[n], idle, gate & preds[i],
+                                  use_pallas=use_pallas)
+            cands.append(c)
+            haves.append(h)
+        return (jnp.select(preds, cands, cands[0]),
+                jnp.select(preds, haves, haves[0]), out)

@@ -54,20 +54,46 @@ def _lod_kernel(bits_ref, out_ref):
     out_ref[...] = jnp.where(best == _BIG, jnp.int32(-1), best)
 
 
-def _schedule_kernel(bits_ref, slot_ref, newbits_ref):
+def _clear_bit(bits, s, do):
+    """Clear bit for slot ``s`` [BP] in rows where ``do`` [BP]."""
+    word = (s // 32)[:, None]
+    w_idx = jax.lax.broadcasted_iota(jnp.int32, bits.shape, dimension=1)
+    mask = (_U32(1) << (31 - (s % 32)).astype(_U32))[:, None]
+    clear = (w_idx == word) & do[:, None]
+    return jnp.where(clear, bits & ~mask, bits)
+
+
+def _schedule_kernel(bits_ref, gate_ref, slot_ref, newbits_ref):
     bits = bits_ref[...]
     keys = _row_keys(bits)
     best = jnp.min(keys, axis=1)                      # [BP]
     have = best != _BIG
-    slot = jnp.where(have, best, jnp.int32(-1))
-    slot_ref[...] = slot
-    # Clear the selected bit: mask applies only in the selected word.
+    slot_ref[...] = jnp.where(have, best, jnp.int32(-1))
+    # Clear the selected bit only on gated rows (the simulator withholds the
+    # commit while the exposed select latency is still draining).
     s = jnp.where(have, best, 0)
-    word = (s // 32)[:, None]
+    newbits_ref[...] = _clear_bit(bits, s, have & (gate_ref[...] != 0))
+
+
+def _rotating_schedule_kernel(bits_ref, ptr_ref, gate_ref, slot_ref, newbits_ref):
+    """Rotating-pointer (least-recently-granted) pick for ``scan``/``lru_flat``:
+    first ready slot at/after ``ptr`` (word-masked LOD), wrapping around to a
+    plain LOD when the upper window is empty, fused with the gated clear."""
+    bits = bits_ref[...]
+    ptr = ptr_ref[...]                                # [BP] int32
     w_idx = jax.lax.broadcasted_iota(jnp.int32, bits.shape, dimension=1)
-    mask = (_U32(1) << (31 - (s % 32)).astype(_U32))[:, None]
-    clear = (w_idx == word) & have[:, None]
-    newbits_ref[...] = jnp.where(clear, bits & ~mask, bits)
+    pw = (ptr // 32)[:, None]
+    pb = (ptr % 32).astype(_U32)[:, None]
+    full = _U32(0xFFFFFFFF)
+    ge_mask = jnp.where(w_idx > pw, full,
+                        jnp.where(w_idx < pw, _U32(0), full >> pb))
+    best_hi = jnp.min(_row_keys(bits & ge_mask), axis=1)
+    best_all = jnp.min(_row_keys(bits), axis=1)
+    best = jnp.where(best_hi != _BIG, best_hi, best_all)
+    have = best_all != _BIG
+    slot_ref[...] = jnp.where(have, best, jnp.int32(-1))
+    s = jnp.where(have, best, 0)
+    newbits_ref[...] = _clear_bit(bits, s, have & (gate_ref[...] != 0))
 
 
 def _pad(bits, block_rows):
@@ -95,17 +121,35 @@ def lod(bits: jax.Array, *, block_rows: int = 256, interpret: bool = False) -> j
     return out[:p]
 
 
+def _pad_rows(a, pp):
+    p = a.shape[0]
+    return jnp.pad(a, ((0, pp - p),)) if pp != p else a
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def schedule_step(
-    bits: jax.Array, *, block_rows: int = 256, interpret: bool = False
+    bits: jax.Array, gate: jax.Array | None = None, *,
+    block_rows: int = 256, interpret: bool = False
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused pick + clear: [P, W] -> (slot [P] int32, new bits [P, W])."""
+    """Fused pick + clear: [P, W] -> (slot [P] int32, new bits [P, W]).
+
+    ``gate`` ([P] bool/int, default all-on) restricts the clear to gated
+    rows; ungated rows still report their pick but keep the bit set (the
+    simulator's exposed-select-latency stall).
+    """
     padded, p, w = _pad(bits.astype(_U32), block_rows)
     pp, wp = padded.shape
+    if gate is None:
+        gate_i = jnp.ones((pp,), jnp.int32)
+    else:
+        gate_i = _pad_rows(gate.astype(jnp.int32), pp)
     slot, newbits = pl.pallas_call(
         _schedule_kernel,
         grid=(pp // block_rows,),
-        in_specs=[pl.BlockSpec((block_rows, wp), lambda i: (i, 0))],
+        in_specs=[
+            pl.BlockSpec((block_rows, wp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
         out_specs=[
             pl.BlockSpec((block_rows,), lambda i: (i,)),
             pl.BlockSpec((block_rows, wp), lambda i: (i, 0)),
@@ -115,5 +159,42 @@ def schedule_step(
             jax.ShapeDtypeStruct((pp, wp), _U32),
         ],
         interpret=interpret,
-    )(padded)
+    )(padded, gate_i)
+    return slot[:p], newbits[:p, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def rotating_schedule_step(
+    bits: jax.Array, ptr: jax.Array, gate: jax.Array | None = None, *,
+    block_rows: int = 256, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Rotating-pointer pick + gated clear for the ``scan``/``lru_flat``
+    policies: first ready slot at/after ``ptr`` (wrapping), cleared where
+    ``gate``. [P, W] bits, [P] ptr -> (slot [P] int32, new bits [P, W]).
+    Pointer advancement is cheap jnp on [P] and stays in the caller."""
+    padded, p, w = _pad(bits.astype(_U32), block_rows)
+    pp, wp = padded.shape
+    ptr_i = _pad_rows(ptr.astype(jnp.int32), pp)
+    if gate is None:
+        gate_i = jnp.ones((pp,), jnp.int32)
+    else:
+        gate_i = _pad_rows(gate.astype(jnp.int32), pp)
+    slot, newbits = pl.pallas_call(
+        _rotating_schedule_kernel,
+        grid=(pp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, wp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, wp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pp,), jnp.int32),
+            jax.ShapeDtypeStruct((pp, wp), _U32),
+        ],
+        interpret=interpret,
+    )(padded, ptr_i, gate_i)
     return slot[:p], newbits[:p, :w]

@@ -21,9 +21,18 @@ def lod(bits, *, block_rows: int = 256):
     return _lod.lod(bits, block_rows=block_rows, interpret=_interpret())
 
 
-def schedule_step(bits, *, block_rows: int = 256):
-    """Fused OoO scheduler step: pick leading ready slot and clear its flag."""
-    return _lod.schedule_step(bits, block_rows=block_rows, interpret=_interpret())
+def schedule_step(bits, gate=None, *, block_rows: int = 256):
+    """Fused OoO scheduler step: pick leading ready slot and clear its flag
+    (only on rows where ``gate``, all rows when None)."""
+    return _lod.schedule_step(bits, gate, block_rows=block_rows,
+                              interpret=_interpret())
+
+
+def rotating_schedule_step(bits, ptr, gate=None, *, block_rows: int = 256):
+    """Fused rotating-pointer scheduler step (``scan``/``lru_flat``): pick the
+    first ready slot at/after ``ptr`` (wrapping) and clear it where ``gate``."""
+    return _lod.rotating_schedule_step(bits, ptr, gate, block_rows=block_rows,
+                                       interpret=_interpret())
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,

@@ -33,18 +33,45 @@ def popcount_ref(w: jax.Array) -> jax.Array:
     return jax.lax.population_count(w.astype(_U32)).astype(jnp.int32)
 
 
-def schedule_step_ref(bits: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Fused scheduler step: pick the leading ready slot per row AND clear its
-    flag. bits: [P, W] uint32 -> (slot [P] int32, new_bits [P, W])."""
-    slot = lod_ref(bits)
-    have = slot >= 0
+def _clear_slot_ref(bits, slot, do):
     s = jnp.clip(slot, 0, bits.shape[-1] * 32 - 1)
     word = s // 32
     mask = (_U32(1) << (31 - (s % 32)).astype(_U32))
     row = jnp.take_along_axis(bits, word[..., None], axis=-1)[..., 0]
-    cleared = jnp.where(have, row & ~mask, row)
-    new_bits = jnp.put_along_axis(bits, word[..., None], cleared[..., None], axis=-1, inplace=False)
-    return slot, new_bits
+    cleared = jnp.where(do, row & ~mask, row)
+    return jnp.put_along_axis(bits, word[..., None], cleared[..., None],
+                              axis=-1, inplace=False)
+
+
+def schedule_step_ref(bits: jax.Array,
+                      gate: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Fused scheduler step: pick the leading ready slot per row AND clear its
+    flag (on rows where ``gate``; every row when None).
+    bits: [P, W] uint32 -> (slot [P] int32, new_bits [P, W])."""
+    slot = lod_ref(bits)
+    have = slot >= 0
+    do = have if gate is None else have & (gate != 0)
+    return slot, _clear_slot_ref(bits, slot, do)
+
+
+def rotating_schedule_step_ref(
+    bits: jax.Array, ptr: jax.Array, gate: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Rotating-pointer scheduler step oracle: first ready slot at/after
+    ``ptr`` per row, wrapping to a plain LOD when the upper window is empty;
+    the pick's flag is cleared on rows where ``gate``."""
+    W = bits.shape[-1]
+    word_ids = jnp.arange(W, dtype=jnp.int32)
+    pw = (ptr // 32)[..., None]
+    pb = (ptr % 32).astype(_U32)[..., None]
+    full = _U32(0xFFFFFFFF)
+    ge_mask = jnp.where(word_ids > pw, full,
+                        jnp.where(word_ids < pw, _U32(0), full >> pb))
+    hi = lod_ref(bits & ge_mask)
+    slot = jnp.where(hi >= 0, hi, lod_ref(bits))
+    have = slot >= 0
+    do = have if gate is None else have & (gate != 0)
+    return slot, _clear_slot_ref(bits, slot, do)
 
 
 def flash_attention_ref(

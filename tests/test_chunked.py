@@ -1,0 +1,238 @@
+"""Chunked stepping engine: bit-exactness against the ``check_every=1``
+per-cycle reference for every registered policy, under all three execution
+engines (solo, batched sweep, sharded), plus the fused Pallas select path.
+
+The chunked engine's correctness argument is that a completed overlay is a
+fixed point of the cycle function and the exact completion cycle is repaired
+from the per-cycle done trace — these tests pin that argument down for every
+policy, several chunk depths (including one that doesn't divide the run
+length), heterogeneous cycle budgets, and the cross-shard reduction path.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import schedulers
+from repro.core import workloads as wl
+from repro.core.graph import reference_evaluate
+from repro.core.overlay import OverlayConfig, simulate, simulate_batch
+from repro.core.partition import build_graph_memory
+
+ALL_POLICIES = sorted(schedulers.REGISTRY)
+CHECK_EVERYS = (1, 7, 32)
+
+
+def _gm(sched, nx=2, ny=2):
+    g = wl.arrow_lu_graph(3, 6, 4, seed=5)
+    policy = schedulers.get(sched)
+    return build_graph_memory(g, nx, ny,
+                              criticality_order=policy.wants_criticality_order)
+
+
+def _stats(r):
+    return (r.done, r.cycles, r.deflections, r.busy_cycles, r.delivered)
+
+
+@pytest.fixture(scope="module")
+def reference_runs():
+    """check_every=1 reference result per policy (compiled once per policy)."""
+    out = {}
+    for sched in ALL_POLICIES:
+        gm = _gm(sched)
+        out[sched] = simulate(gm, OverlayConfig(
+            scheduler=sched, max_cycles=500_000, check_every=1))
+        assert out[sched].done
+    return out
+
+
+@pytest.mark.parametrize("check_every", CHECK_EVERYS)
+@pytest.mark.parametrize("sched", ALL_POLICIES)
+def test_simulate_chunked_bit_identical(sched, check_every, reference_runs):
+    gm = _gm(sched)
+    r = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=500_000,
+                                   check_every=check_every))
+    ref = reference_runs[sched]
+    assert _stats(r) == _stats(ref), (sched, check_every)
+    np.testing.assert_array_equal(r.values, ref.values)
+
+
+def test_autotuned_check_every_bit_identical(reference_runs):
+    for sched in ALL_POLICIES:
+        gm = _gm(sched)
+        r = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=500_000))
+        assert _stats(r) == _stats(reference_runs[sched]), sched
+        np.testing.assert_array_equal(r.values, reference_runs[sched].values)
+
+
+@pytest.mark.parametrize("check_every", CHECK_EVERYS)
+def test_simulate_batch_chunked_bit_identical(check_every):
+    g = wl.arrow_lu_graph(3, 6, 4, seed=5)
+    gm = build_graph_memory(g, 4, 4, criticality_order=True)
+    cfgs = [OverlayConfig(scheduler=p, max_cycles=500_000,
+                          check_every=check_every) for p in ALL_POLICIES]
+    # heterogeneous budget: freezes mid-chunk at its OWN max_cycles
+    cfgs.append(OverlayConfig(scheduler="scan", max_cycles=100,
+                              check_every=check_every))
+    # an element that finishes long before the others keeps re-entering
+    # chunks; its repaired cycle count must not drift
+    cfgs.append(OverlayConfig(scheduler="ooo", select_latency=4,
+                              max_cycles=500_000, check_every=check_every))
+    for cfg, rb in zip(cfgs, simulate_batch(gm, cfgs)):
+        rs = simulate(gm, OverlayConfig(
+            scheduler=cfg.scheduler, select_latency=cfg.select_latency,
+            max_cycles=cfg.max_cycles, check_every=1))
+        assert _stats(rb) == _stats(rs), (cfg.scheduler, check_every)
+        np.testing.assert_array_equal(rb.values, rs.values)
+
+
+def test_batch_budget_on_chunk_boundary_is_exact():
+    # Regression: an element whose max_cycles is an exact multiple of
+    # check_every exhausts its budget precisely at a chunk boundary; it is
+    # NOT a fixed point of the cycle function, so it must drop out of the
+    # guard-free chunked phase instead of silently simulating on while the
+    # longer-running element keeps chunking.
+    g = wl.arrow_lu_graph(3, 6, 4, seed=5)
+    gm = build_graph_memory(g, 4, 4, criticality_order=True)
+    cfgs = [OverlayConfig(scheduler="scan", max_cycles=98, check_every=7),
+            OverlayConfig(scheduler="ooo", max_cycles=500_000, check_every=7)]
+    for cfg, rb in zip(cfgs, simulate_batch(gm, cfgs)):
+        rs = simulate(gm, OverlayConfig(
+            scheduler=cfg.scheduler, max_cycles=cfg.max_cycles, check_every=1))
+        assert _stats(rb) == _stats(rs), cfg.scheduler
+        np.testing.assert_array_equal(rb.values, rs.values)
+
+
+def test_chunk_boundary_never_overshoots_budget():
+    # max_cycles deliberately NOT a multiple of check_every: the freeze guard
+    # must stop the cycle counter exactly at the budget.
+    g = wl.arrow_lu_graph(3, 6, 4, seed=5)
+    gm = build_graph_memory(g, 2, 2, criticality_order=True)
+    r = simulate(gm, OverlayConfig(scheduler="ooo", max_cycles=101,
+                                   check_every=32))
+    ref = simulate(gm, OverlayConfig(scheduler="ooo", max_cycles=101,
+                                     check_every=1))
+    assert not r.done and not ref.done
+    assert _stats(r) == _stats(ref)
+    np.testing.assert_array_equal(r.values, ref.values)
+
+
+def test_check_every_zero_rejected():
+    with pytest.raises(ValueError, match="check_every"):
+        OverlayConfig(check_every=0)
+
+
+def test_sharded_chunked_bit_identical():
+    import jax
+
+    from repro.core.distributed import simulate_sharded
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    g = wl.arrow_lu_graph(2, 5, 3, seed=4)
+    ref_vals = reference_evaluate(g)
+    gm = build_graph_memory(g, 2, 2, criticality_order=True)
+    for sched in ALL_POLICIES:
+        ref = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=500_000,
+                                         check_every=1))
+        for check_every in (8, None):
+            r = simulate_sharded(gm, mesh, OverlayConfig(
+                scheduler=sched, max_cycles=500_000, check_every=check_every))
+            assert _stats(r) == _stats(ref), (sched, check_every)
+        np.testing.assert_array_equal(r.values, ref_vals)
+
+
+def test_simulate_batch_sharded_matches_serial():
+    import jax
+
+    from repro.core.distributed import simulate_batch_sharded
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    g = wl.arrow_lu_graph(2, 5, 3, seed=4)
+    gm = build_graph_memory(g, 2, 2, criticality_order=True)
+    cfgs = [OverlayConfig(scheduler=p, max_cycles=500_000)
+            for p in ALL_POLICIES]
+    cfgs.append(OverlayConfig(scheduler="scan", max_cycles=60))
+    for cfg, rb in zip(cfgs, simulate_batch_sharded(gm, mesh, cfgs)):
+        rs = simulate(gm, OverlayConfig(scheduler=cfg.scheduler,
+                                        max_cycles=cfg.max_cycles,
+                                        check_every=1))
+        assert _stats(rb) == _stats(rs), cfg.scheduler
+        np.testing.assert_array_equal(rb.values, rs.values)
+
+
+@pytest.mark.parametrize("sched", ["ooo", "scan", "lru_flat"])
+def test_use_pallas_bit_identical(sched):
+    # interpret=True on CPU: same fused kernels the TPU path compiles
+    g_small = wl.layered_dag(4, 6, seed=3)
+    gm_small = build_graph_memory(
+        g_small, 2, 2,
+        criticality_order=schedulers.get(sched).wants_criticality_order)
+    ref = simulate(gm_small, OverlayConfig(scheduler=sched, check_every=1))
+    r = simulate(gm_small, OverlayConfig(scheduler=sched, check_every=1,
+                                         use_pallas=True))
+    assert _stats(r) == _stats(ref), sched
+    np.testing.assert_array_equal(r.values, ref.values)
+
+
+def test_use_pallas_batched_bit_identical():
+    # the Pallas kernels must also batch correctly under the vmapped engine
+    g = wl.layered_dag(4, 6, seed=3)
+    gm = build_graph_memory(g, 2, 2, criticality_order=True)
+    cfgs = [OverlayConfig(scheduler=p, use_pallas=True, max_cycles=100_000)
+            for p in ("ooo", "scan")]
+    for cfg, rb in zip(cfgs, simulate_batch(gm, cfgs)):
+        rs = simulate(gm, OverlayConfig(scheduler=cfg.scheduler,
+                                        max_cycles=100_000, check_every=1))
+        assert _stats(rb) == _stats(rs), cfg.scheduler
+        np.testing.assert_array_equal(rb.values, rs.values)
+
+
+def test_simulate_batch_rejects_mixed_use_pallas():
+    g = wl.reduction_tree(16)
+    gm = build_graph_memory(g, 2, 2)
+    with pytest.raises(ValueError, match="use_pallas"):
+        simulate_batch(gm, [OverlayConfig(use_pallas=False),
+                            OverlayConfig(use_pallas=True)])
+
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.core import workloads as wl
+from repro.core.partition import build_graph_memory
+from repro.core.overlay import OverlayConfig, simulate
+from repro.core.distributed import simulate_sharded, simulate_batch_sharded
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+g = wl.arrow_lu_graph(4, 8, 6, seed=2)
+gm = build_graph_memory(g, 4, 8, criticality_order=True)
+ref = simulate(gm, OverlayConfig(scheduler="ooo", max_cycles=500000, check_every=1))
+r = simulate_sharded(gm, mesh, OverlayConfig(scheduler="ooo", max_cycles=500000, check_every=7))
+assert r.done and r.cycles == ref.cycles, (r.cycles, ref.cycles)
+assert (r.deflections, r.busy_cycles, r.delivered) == (
+    ref.deflections, ref.busy_cycles, ref.delivered)
+np.testing.assert_array_equal(r.values, ref.values)
+cfgs = [OverlayConfig(scheduler="ooo", max_cycles=500000),
+        OverlayConfig(scheduler="inorder", max_cycles=500000),
+        OverlayConfig(scheduler="scan", max_cycles=200)]
+for cfg, b in zip(cfgs, simulate_batch_sharded(gm, mesh, cfgs)):
+    s = simulate(gm, OverlayConfig(scheduler=cfg.scheduler,
+                                   max_cycles=cfg.max_cycles, check_every=1))
+    assert (b.done, b.cycles, b.deflections, b.busy_cycles) == (
+        s.done, s.cycles, s.deflections, s.busy_cycles), cfg.scheduler
+    np.testing.assert_array_equal(b.values, s.values)
+print("CHUNKED_SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_chunked_sharded_multidevice_exact():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT],
+                         cwd=os.getcwd(), capture_output=True, text=True,
+                         env=env, timeout=420)
+    assert "CHUNKED_SHARDED_OK" in out.stdout, out.stderr[-2000:]

@@ -33,6 +33,59 @@ def test_schedule_step_matches_ref(p, w):
     np.testing.assert_array_equal(nb_got, nb_want)
 
 
+@pytest.mark.parametrize("p,w", [(4, 2), (256, 13), (37, 5)])
+def test_schedule_step_gated(p, w):
+    rng = np.random.default_rng(p * 7 + w)
+    bits = rng.integers(0, 2**32, size=(p, w), dtype=np.uint32)
+    bits[rng.random((p, w)) < 0.5] = 0
+    gate = rng.random(p) < 0.5
+    s_got, nb_got = ops.schedule_step(jnp.asarray(bits), jnp.asarray(gate))
+    s_want, nb_want = ref.schedule_step_ref(jnp.asarray(bits), jnp.asarray(gate))
+    np.testing.assert_array_equal(s_got, s_want)
+    np.testing.assert_array_equal(nb_got, nb_want)
+    # ungated rows still pick but must keep their bits intact
+    np.testing.assert_array_equal(np.asarray(nb_got)[~gate], bits[~gate])
+    s_all, _ = ops.schedule_step(jnp.asarray(bits))
+    np.testing.assert_array_equal(s_got, s_all)
+
+
+@pytest.mark.parametrize("p,w", [(4, 2), (256, 13), (37, 5)])
+def test_rotating_schedule_step_matches_ref(p, w):
+    rng = np.random.default_rng(p * 13 + w)
+    bits = rng.integers(0, 2**32, size=(p, w), dtype=np.uint32)
+    bits[rng.random((p, w)) < 0.5] = 0
+    ptr = rng.integers(0, w * 32, size=p, dtype=np.int32)
+    gate = rng.random(p) < 0.7
+    got = ops.rotating_schedule_step(jnp.asarray(bits), jnp.asarray(ptr),
+                                     jnp.asarray(gate))
+    want = ref.rotating_schedule_step_ref(jnp.asarray(bits), jnp.asarray(ptr),
+                                          jnp.asarray(gate))
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_rotating_schedule_step_semantics():
+    # one row, flags at slots 3 and 40 (W=2): ptr selects the rotating window
+    bits = bitvec.set_bit(jnp.zeros((1, 2), jnp.uint32), jnp.asarray([0]),
+                          jnp.asarray([3]), jnp.asarray([True]))
+    bits = bitvec.set_bit(bits, jnp.asarray([0]), jnp.asarray([40]),
+                          jnp.asarray([True]))
+    for ptr, want in [(0, 3), (3, 3), (4, 40), (40, 40), (41, 3)]:
+        slot, nb = ops.rotating_schedule_step(bits, jnp.asarray([ptr]))
+        assert int(slot[0]) == want, (ptr, int(slot[0]))
+        assert not bool(bitvec.test_bit(nb, jnp.asarray([0]),
+                                        jnp.asarray([want]))[0])
+    # and the rotating ref matches the jnp scheduler policy's select
+    from repro.core import schedulers
+    rng = np.random.default_rng(5)
+    rbits = jnp.asarray(rng.integers(0, 2**32, size=(1, 24, 3), dtype=np.uint32))
+    rptr = jnp.asarray(rng.integers(0, 96, size=(1, 24), dtype=np.int32))
+    pol = schedulers.get("lru_flat")
+    cand, have = pol.select(dict(rdy=rbits, ptr=rptr), jnp.ones((1, 24), bool))
+    slot, _ = ops.rotating_schedule_step(rbits.reshape(24, 3), rptr.reshape(24))
+    np.testing.assert_array_equal(np.asarray(cand).reshape(-1), np.asarray(slot))
+
+
 def test_schedule_step_drains_all_bits():
     rng = np.random.default_rng(0)
     bits = jnp.asarray(rng.integers(0, 2**32, size=(8, 4), dtype=np.uint32))
