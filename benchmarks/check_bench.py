@@ -18,9 +18,17 @@ import sys
 def _cycle_counts(bench: dict) -> dict[str, int]:
     """Flatten every tracked cycle count to {metric_name: cycles}."""
     out: dict[str, int] = {}
-    for row in bench.get("fig1", []):
+    flat_rows = list(bench.get("fig1", []))
+    # Placement & eject sections carry per-row cycles_* keys like fig1 does
+    # (identity/random/annealed placements; n_first/priority arbitration) —
+    # all deterministic simulation semantics, all blocking.
+    for section in ("placement", "eject"):
+        flat_rows += bench.get(section, {}).get("rows", [])
+    for row in flat_rows:
         for key, val in row.items():
-            if key.startswith("cycles_"):
+            # cycles_per_sec is wall-clock throughput, not simulation
+            # semantics — it belongs to the informational wall report.
+            if key.startswith("cycles_") and key != "cycles_per_sec":
                 out[f"{row['name']}.{key}"] = int(val)
     sweep = bench.get("policy_sweep", {})
     for row in sweep.get("schedulers", []):
@@ -33,7 +41,10 @@ def _cycle_counts(bench: dict) -> dict[str, int]:
 
 def _wall_times(bench: dict) -> dict[str, float]:
     out: dict[str, float] = {}
-    for row in bench.get("fig1", []):
+    rows = list(bench.get("fig1", []))
+    for section in ("placement", "eject"):
+        rows += bench.get(section, {}).get("rows", [])
+    for row in rows:
         out[f"{row['name']}.wall_s"] = float(row["wall_s"])
         if "cycles_per_sec" in row:
             out[f"{row['name']}.cycles_per_sec"] = float(row["cycles_per_sec"])

@@ -8,13 +8,15 @@ Overrides are typed dataclasses.replace on the arch config; --profile prints
 the top HBM-traffic contributors (trip-count-aware) for hypothesis building.
 Results append to experiments/perf/<arch>__<shape>__<tag>.json.
 
-Overlay mode (``--overlay``) hillclimbs the *overlay simulator's* config
-space instead: greedy coordinate descent over (placement strategy x
-scheduler policy x exposed select latency x eject capacity), minimizing
-simulated cycle count on an arrow-LU workload. Each neighborhood that shares
-a GraphMemory + eject capacity is evaluated through ONE
-``simulate_batch`` call (the vmapped sweep engine), so a whole step costs a
-single XLA program.
+Overlay mode (``--overlay``) is a thin CLI over
+:func:`repro.place.config_hillclimb`: greedy coordinate descent over
+(placement strategy — including the NoC-aware annealer — x scheduler policy
+x exposed select latency x eject capacity), minimizing simulated cycle count
+on an arrow-LU workload. Each neighborhood that shares a GraphMemory + eject
+capacity is evaluated through ONE ``simulate_batch`` call (the vmapped sweep
+engine), so a whole step costs a single XLA program. Output is the standard
+machine-readable benchmark shape: ``name,us_per_call,derived`` CSV on stdout
+plus a JSON record under --out.
 
   PYTHONPATH=src python -m benchmarks.hillclimb --overlay --blocks 8 --tag hc1
 """
@@ -24,6 +26,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402
 import json  # noqa: E402
+import sys  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.launch import dryrun  # noqa: E402
@@ -64,113 +67,43 @@ def apply_overrides(cfg, ov):
 
 
 # ---------------------------------------------------------------------------
-# Overlay-config hillclimb (scheduler subsystem + batched sweep engine).
+# Overlay-config hillclimb: thin CLI over repro.place.config_hillclimb.
 # ---------------------------------------------------------------------------
-
-OVERLAY_SPACE = {
-    "placement": ["round_robin", "clustered", "bulk_clustered", "critical_chain"],
-    "scheduler": None,        # filled from the registry at runtime
-    "select_latency": [None, 1, 2, 4],
-    "eject_capacity": [1, 2],
-}
 
 
 def overlay_hillclimb(args):
-    import time
-
-    from repro.core import schedulers
+    from repro import place
     from repro.core import workloads as wl
-    from repro.core.overlay import OverlayConfig, simulate_batch
-    from repro.core.partition import build_graph_memory
 
     g = wl.arrow_lu_graph(args.blocks, args.block_size, args.border,
                           seed=args.seed)
-    space = dict(OVERLAY_SPACE)
-    space["scheduler"] = sorted(schedulers.REGISTRY)
-
-    gms: dict = {}
-
-    def gm_for(placement, criticality_order):
-        key = (placement, criticality_order)
-        if key not in gms:
-            gms[key] = build_graph_memory(
-                g, args.nx, args.ny, placement=placement,
-                criticality_order=criticality_order, seed=args.seed)
-        return gms[key]
-
-    n_evals = [0]
-    seen: dict = {}  # config tuple -> cycles (configs revisit across steps)
-
-    def evaluate(points):
-        """points: list of config dicts -> list of cycle counts (inf when a
-        config does not finish within --max-cycles, so the search just steps
-        around it). Unseen points that share a GraphMemory + eject capacity
-        run as one batched program; scored points come from the memo. Each
-        scheduler gets the memory layout it is designed for
-        (``wants_criticality_order``), matching the fig1 methodology."""
-        key = lambda p: tuple(sorted(p.items(), key=lambda kv: kv[0]))
-        cycles = [seen.get(key(p)) for p in points]
-        groups: dict = {}
-        for i, p in enumerate(points):
-            if cycles[i] is None:
-                wants = schedulers.get(p["scheduler"]).wants_criticality_order
-                groups.setdefault(
-                    (p["placement"], p["eject_capacity"], wants), []).append(i)
-        for (placement, eject, wants), idxs in groups.items():
-            n_evals[0] += len(idxs)
-            cfgs = [OverlayConfig(scheduler=points[i]["scheduler"],
-                                  select_latency=points[i]["select_latency"],
-                                  eject_capacity=eject,
-                                  max_cycles=args.max_cycles) for i in idxs]
-            for i, r in zip(idxs, simulate_batch(gm_for(placement, wants), cfgs)):
-                c = r.cycles if r.done else float("inf")
-                cycles[i] = seen[key(points[i])] = c
-        return cycles
-
-    def _finite(c):
-        return None if c == float("inf") else c
-
-    current = dict(placement="round_robin", scheduler="ooo",
-                   select_latency=None, eject_capacity=1)
-    t0 = time.time()
-    best = evaluate([current])[0]
-    trajectory = [{"config": dict(current), "cycles": _finite(best)}]
-    while True:
-        neighbors = []
-        for field, values in space.items():
-            for v in values:
-                if v != current[field]:
-                    neighbors.append(dict(current, **{field: v}))
-        res = evaluate(neighbors)
-        j = min(range(len(neighbors)), key=res.__getitem__)
-        if res[j] >= best:
-            break
-        current, best = neighbors[j], res[j]
-        trajectory.append({"config": dict(current), "cycles": _finite(best)})
-    wall = time.time() - t0
-
-    rec = {
+    rec = place.config_hillclimb(g, args.nx, args.ny,
+                                 max_cycles=args.max_cycles, seed=args.seed)
+    rec.update({
         "mode": "overlay",
         "workload": {"family": "arrow_lu", "blocks": args.blocks,
                      "block_size": args.block_size, "border": args.border,
                      "nodes": g.num_nodes, "edges": g.num_edges,
                      "grid": [args.nx, args.ny]},
-        "space": {k: [str(v) for v in vs] for k, vs in space.items()},
-        "trajectory": trajectory,
-        "best_config": current,
-        "best_cycles": _finite(best),
-        "evaluations": n_evals[0],
-        "wall_s": round(wall, 3),
         "tag": args.tag,
-    }
+    })
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, f"overlay__{args.tag}.json")
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
-    print(f"wrote {path}")
-    print(f"nodes={g.num_nodes} edges={g.num_edges} steps={len(trajectory) - 1}")
-    for step in trajectory:
-        print(f"  cycles={step['cycles'] or 'not-done':>8}  {step['config']}")
+
+    # Standard machine-readable benchmark output: CSV rows on stdout
+    # (derived = cycles at each accepted step; final row is the optimum;
+    # 'inf' marks configs that never finished within --max-cycles).
+    fmt = lambda c: "inf" if c is None else c
+    print("name,us_per_call,derived")
+    for i, step in enumerate(rec["trajectory"]):
+        print(f"hillclimb_step{i},0.0,{fmt(step['cycles'])}")
+    print(f"hillclimb_best,{round(1e6 * rec['wall_s'], 1)},"
+          f"{fmt(rec['best_cycles'])}")
+    print(f"# wrote {path}", file=sys.stderr)
+    print(f"# best_config={rec['best_config']} "
+          f"evaluations={rec['evaluations']}", file=sys.stderr)
     return rec
 
 

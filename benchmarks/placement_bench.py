@@ -1,0 +1,110 @@
+"""Placement & eject-policy benchmarks (the repro.place subsystem's rows).
+
+``placement``: fig1-family arrow-LU workloads, each simulated (ooo policy)
+under four placements —
+
+  * ``identity``  — the partitioner's default round-robin (the layout every
+    other committed cycle count uses);
+  * ``random``    — uniform node -> PE draw, the annealer's init/baseline;
+  * ``annealed``  — the NoC-aware parallel-tempering placer from the random
+    init (the tracked claim: annealed < random);
+  * ``annealed_identity`` — the same placer warm-started from the identity
+    layout (the "beats the default too" row).
+
+``eject``: a congested small-grid pair quantifying the criticality-aware
+W/N eject arbitration (``eject_policy="priority"``) against Hoplite's
+N-first default — cycle counts and total deflections for both.
+
+Everything here is integer/deterministic (fixed PRNG keys, integer cost
+annealer), so all ``cycles_*`` values are CI-gated by
+``benchmarks/check_bench.py`` exactly like the fig1 rows.
+"""
+from __future__ import annotations
+
+import time
+
+from repro import place
+from repro.core import workloads as wl
+from repro.core.overlay import OverlayConfig, simulate
+from repro.core.partition import build_graph_memory
+
+# (row name suffix, arrow_lu args, grid, anneal budget)
+PLACEMENT_WORKLOADS = [
+    ("arrow_n3689", (2, 8, 6), (8, 8),
+     place.AnnealConfig(replicas=8, rounds=32, steps=1024, seed=0)),
+    ("arrow_n10308", (4, 8, 8), (16, 16),
+     place.AnnealConfig(replicas=8, rounds=64, steps=2048, seed=0)),
+]
+
+# Congested cases for the eject-arbitration row: dense coupling on a small
+# grid keeps both router inputs competing for the single eject port.
+EJECT_WORKLOADS = [
+    ("arrow_n9838", lambda: wl.arrow_lu_graph(2, 8, 12, seed=3), (4, 4)),
+    ("banded_n16822", lambda: wl.banded_lu_graph(60, 12, seed=3), (4, 4)),
+]
+
+
+def run_placement():
+    rows = []
+    for name, (blocks, bs, border), (nx, ny), acfg in PLACEMENT_WORKLOADS:
+        g = wl.arrow_lu_graph(blocks, bs, border, seed=3)
+        cfg = OverlayConfig(scheduler="ooo", max_cycles=4_000_000)
+        t0 = time.time()
+        ann = place.anneal_placement(g, nx, ny, acfg)
+        ann_id = place.anneal_placement(
+            g, nx, ny, acfg, init=place.resolve(g, nx, ny, "round_robin"))
+        res = place.evaluate_placements(g, nx, ny, {
+            "identity": None,
+            "random": place.PlacementSpec(strategy="random", seed=acfg.seed),
+            "annealed": ann.node_pe,
+            "annealed_identity": ann_id.node_pe,
+        }, cfgs=cfg)
+        wall = time.time() - t0
+        assert all(r.done for r in res.values()), name
+        rows.append({
+            "name": f"placement_{name}",
+            "us_per_call": round(1e6 * wall, 1),
+            # headline: cycle-count ratio random / annealed (>1 == win)
+            "derived": round(res["random"].cycles / res["annealed"].cycles, 4),
+            "nodes": g.num_nodes,
+            "edges": g.num_edges,
+            "grid": [nx, ny],
+            "wall_s": round(wall, 3),
+            "cycles_identity": res["identity"].cycles,
+            "cycles_random": res["random"].cycles,
+            "cycles_annealed": res["annealed"].cycles,
+            "cycles_annealed_identity": res["annealed_identity"].cycles,
+            "anneal_cost_random": ann.init_cost,
+            "anneal_cost_annealed": ann.cost,
+        })
+    return rows
+
+
+def run_eject():
+    rows = []
+    for name, mk, (nx, ny) in EJECT_WORKLOADS:
+        g = mk()
+        gm = build_graph_memory(g, nx, ny, criticality_order=True)
+        t0 = time.time()
+        res = {}
+        for pol in ("n_first", "priority"):
+            res[pol] = simulate(gm, OverlayConfig(
+                scheduler="ooo", eject_policy=pol, max_cycles=4_000_000))
+            assert res[pol].done, (name, pol)
+        wall = time.time() - t0
+        base, prio = res["n_first"], res["priority"]
+        rows.append({
+            "name": f"eject_{name}",
+            "us_per_call": round(1e6 * wall, 1),
+            # headline: deflection-cycle savings of the priority pick
+            "derived": round(base.cycles / prio.cycles, 4),
+            "nodes": g.num_nodes,
+            "edges": g.num_edges,
+            "grid": [nx, ny],
+            "wall_s": round(wall, 3),
+            "cycles_n_first": base.cycles,
+            "cycles_priority": prio.cycles,
+            "deflections_n_first": base.deflections,
+            "deflections_priority": prio.deflections,
+        })
+    return rows

@@ -8,6 +8,8 @@
               hot-timed simulated-cycles-per-second throughput per row
   sweep     — every registered policy on one graph via one batched program
   chunking  — chunked-engine throughput: check_every=1 vs autotuned depth
+  placement — repro.place subsystem: identity vs random vs annealed
+              placements (CI-gated cycles) + priority eject arbitration
   roofline  — per (arch x shape) roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]`` runs everything (fig1 sweeps to ~470K
@@ -73,6 +75,17 @@ def main() -> None:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
     print(f"chunking_speedup_hot,0.0,{bench['chunking']['speedup_hot']}",
           flush=True)
+
+    # Placement subsystem: identity vs random vs NoC-annealed placements
+    # (cycle counts CI-gated), and the criticality-aware eject arbitration
+    # on congested grids.
+    from benchmarks import placement_bench
+    bench["placement"] = {"rows": placement_bench.run_placement()}
+    for r in bench["placement"]["rows"]:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    bench["eject"] = {"rows": placement_bench.run_eject()}
+    for r in bench["eject"]["rows"]:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
     from benchmarks import roofline
     rows = roofline.run("single")

@@ -72,22 +72,28 @@ def _mk_all_reduce(axis_x: str, axis_y: str):
 
 
 def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | None = None,
-                     axis_x: str = "data", axis_y: str = "model"):
+                     axis_x: str = "data", axis_y: str = "model",
+                     nx: int | None = None, ny: int | None = None):
     """Run the overlay with the PE grid sharded over ``mesh``.
 
     nx must divide by mesh.shape[axis_x], ny by mesh.shape[axis_y].
-    Returns the same SimResult as overlay.simulate.
+    Returns the same SimResult as overlay.simulate. Accepts a packed
+    :class:`GraphMemory` or a raw ``DataflowGraph`` plus ``nx``/``ny`` (the
+    graph is then placed per ``cfg.placement`` — see :mod:`repro.place`).
 
-    The stepping is chunked (``cfg.check_every``, autotuned when None): the
-    cycle body inside a chunk keeps every predicate and stat shard-local, and
-    the cross-shard psum/pmin runs once per chunk on the stacked done trace
+    The stepping is chunked (``cfg.check_every``; the autotune sees the mesh
+    size, so multi-device runs default to deep 32-cycle chunks): the cycle
+    body inside a chunk keeps every predicate and stat shard-local, and the
+    cross-shard psum/pmin runs once per chunk on the stacked done trace
     and the stat deltas — two collectives per ``check_every`` cycles instead
     of ~seven per cycle. ``check_every=1`` is the legacy per-cycle engine.
     """
     cfg = cfg or overlay.OverlayConfig()
+    gm = overlay._as_memory(gm, cfg, nx, ny)
     sched = schedulers.get(cfg.scheduler)
     g = overlay.device_graph(gm)
-    K = overlay.resolve_check_every(cfg, gm.nx, gm.ny, g["opcode"].shape[2])
+    K = overlay.resolve_check_every(cfg, gm.nx, gm.ny, g["opcode"].shape[2],
+                                    num_devices=mesh.size)
 
     def spec_for(leaf):
         return P(axis_x, axis_y, *([None] * (leaf.ndim - 2)))
@@ -145,12 +151,14 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
 
 
 def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
-                           cfgs, axis_x: str = "data", axis_y: str = "model"):
+                           cfgs, axis_x: str = "data", axis_y: str = "model",
+                           nx: int | None = None, ny: int | None = None):
     """Multi-config sweep of a sharded overlay: vmap inside shard_map.
 
     One XLA program runs every config of ``cfgs`` (scheduler / select latency
-    / cycle budget may vary; ``eject_capacity`` and ``use_pallas`` must be
-    uniform) with the PE grid tiled over ``mesh`` — the batched counterpart
+    / cycle budget may vary; ``eject_capacity``, ``eject_policy``,
+    ``use_pallas`` and ``placement`` must be uniform) with the PE grid
+    tiled over ``mesh`` — the batched counterpart
     of :func:`simulate_sharded` for overlays larger than one device, and the
     sharded counterpart of :func:`repro.core.overlay.simulate_batch`. The
     cycle body is vmapped over the stacked config axis; torus ppermutes and
@@ -164,10 +172,28 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
     if len(eject) != 1:
         raise ValueError(
             f"simulate_batch_sharded needs a uniform eject_capacity, got {eject}")
+    policy = {c.eject_policy for c in cfgs}
+    if len(policy) != 1:
+        raise ValueError(
+            f"simulate_batch_sharded needs a uniform eject_policy, got {policy}")
     pallas = {c.use_pallas for c in cfgs}
     if len(pallas) != 1:
         raise ValueError(
             f"simulate_batch_sharded needs a uniform use_pallas, got {pallas}")
+    placements = {c.placement for c in cfgs}
+    if len(placements) != 1:
+        raise ValueError(
+            f"simulate_batch_sharded needs a uniform placement, got {placements}")
+    if not isinstance(gm, GraphMemory):
+        # Shared packed memory image: see overlay.simulate_batch.
+        wants = {schedulers.get(c.scheduler).wants_criticality_order
+                 for c in cfgs}
+        if len(wants) != 1:
+            raise ValueError(
+                "simulate_batch_sharded over a raw DataflowGraph needs "
+                "schedulers with a uniform wants_criticality_order; group "
+                "configs by memory layout or pass a pre-built GraphMemory")
+    gm = overlay._as_memory(gm, cfgs[0], nx, ny)
     names: list[str] = []
     for c in cfgs:
         schedulers.get(c.scheduler)  # validate early
@@ -186,7 +212,8 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
         [schedulers.get(c.scheduler).sel_lat(c, num_words) for c in cfgs],
         jnp.int32)
     max_cycs = jnp.asarray([c.max_cycles for c in cfgs], jnp.int32)
-    K = overlay.resolve_check_every(base, gm.nx, gm.ny, L)
+    K = overlay.resolve_check_every(base, gm.nx, gm.ny, L,
+                                    num_devices=mesh.size)
 
     def spec_for(leaf):
         return P(axis_x, axis_y, *([None] * (leaf.ndim - 2)))

@@ -53,7 +53,7 @@ def roll_shift_s(link_s):
 
 
 def router_cycle(link_e, link_s, inject, *, shift_e=roll_shift_e, shift_s=roll_shift_s,
-                 x0=0, y0=0, eject_capacity=1):
+                 x0=0, y0=0, eject_capacity=1, eject_policy="n_first"):
     """One NoC cycle for every router in parallel.
 
     Args:
@@ -65,9 +65,20 @@ def router_cycle(link_e, link_s, inject, *, shift_e=roll_shift_e, shift_s=roll_s
       eject_capacity: PE packets/cycle. 2 models the paper's §II-C BRAM
         multipumping (extra virtual write ports): N and W can eject in the
         same cycle, removing the W-at-destination deflection.
+      eject_policy: single-port eject arbitration. ``"n_first"`` (default,
+        Hoplite's austere rule: N always beats W); ``"priority"`` picks the
+        packet targeting the more critical destination slot — with
+        criticality-ordered local memory the lower ``dst_slot`` IS the higher
+        static criticality (§II-C hints the W/N pick could look at slot
+        priority). The losing N packet deflects south around the Y ring, the
+        losing W packet deflects east, so the router stays bufferless.
+        Irrelevant when ``eject_capacity >= 2`` (no eject contention).
 
     Returns:
-      (new_link_e, new_link_s, ejects [list of packet dicts], accepted)
+      (new_link_e, new_link_s, ejects [list of packet dicts], accepted,
+       deflected) — ``deflected`` is the [nx, ny] int32 count of in-flight
+      packets this router deflected (kept circulating after losing
+      arbitration) this cycle.
     """
     nx, ny = link_e["valid"].shape
     my_x = jnp.arange(nx, dtype=jnp.int32)[:, None] + x0
@@ -85,20 +96,35 @@ def router_cycle(link_e, link_s, inject, *, shift_e=roll_shift_e, shift_s=roll_s
     def wants_s(p):
         return p["valid"] & (p["dst_x"] == my_x) & (p["dst_y"] != my_y)
 
-    # --- eject arbitration: N beats W ---
-    n_ej = at_dst(n_in)
+    # --- eject arbitration ---
+    n_at, w_at = at_dst(n_in), at_dst(w_in)
     if eject_capacity >= 2:
-        w_ej = at_dst(w_in)                       # both may eject
+        n_ej, w_ej = n_at, w_at                   # both may eject
+    elif eject_policy == "priority":
+        # Criticality-aware pick: lower dst_slot == higher criticality rank
+        # in the destination PE's (criticality-ordered) local memory.
+        w_wins = w_at & n_at & (w_in["dst_slot"] < n_in["dst_slot"])
+        n_ej = n_at & ~w_wins
+        w_ej = w_at & (~n_at | w_wins)
+    elif eject_policy == "n_first":
+        n_ej = n_at
+        w_ej = w_at & ~n_ej
     else:
-        w_ej = at_dst(w_in) & ~n_ej
+        raise ValueError(
+            f"unknown eject_policy {eject_policy!r}; use 'n_first' or 'priority'")
     eject = pk_where(n_ej, n_in, pk_invalidate(w_in, w_ej & ~n_ej))
     eject2 = pk_invalidate(w_in, w_ej & n_ej) if eject_capacity >= 2 else None
 
-    # --- S output: N continues south unless it ejected ---
+    # --- S output: N continues south unless it ejected (an N packet that
+    #     lost a priority eject deflects south around the Y ring) ---
     n_takes_s = n_in["valid"] & ~n_ej
     w_takes_s = wants_s(w_in) & ~n_takes_s
     # --- E output: W continues east, or deflects E on any lost arbitration ---
     w_takes_e = wants_e(w_in) | (wants_s(w_in) & n_takes_s) | (at_dst(w_in) & ~w_ej)
+
+    deflected = ((wants_s(w_in) & n_takes_s).astype(jnp.int32)
+                 + (w_at & ~w_ej).astype(jnp.int32)
+                 + (n_at & ~n_ej).astype(jnp.int32))
 
     # --- PE injection (lowest priority) ---
     inj_local = at_dst(inject)
@@ -119,7 +145,7 @@ def router_cycle(link_e, link_s, inject, *, shift_e=roll_shift_e, shift_s=roll_s
     new_s = pk_where(n_takes_s, n_in,
                      pk_where(w_takes_s, w_in, pk_invalidate(inject, inj_s)))
     ejects = [eject] if eject2 is None else [eject, eject2]
-    return new_e, new_s, ejects, accepted
+    return new_e, new_s, ejects, accepted, deflected
 
 
 def links_empty(link_e, link_s):

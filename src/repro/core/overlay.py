@@ -57,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitvec, noc, schedulers
-from .graph import DIV_EPS, OP_ADD, OP_DIV, OP_MUL, OP_SUB
+from .graph import DIV_EPS, OP_ADD, OP_DIV, OP_MUL, OP_SUB, DataflowGraph
 from .partition import GraphMemory
 from .schedulers import row_gather as _row_gather
 
@@ -100,6 +100,18 @@ class OverlayConfig:
     kernels in :mod:`repro.kernels.lod` (one VMEM round-trip per pick) for
     policies that support it; off by default so CPU CI runs the pure-jnp
     reference path. On non-TPU backends the kernels run in interpret mode.
+
+    ``eject_policy`` picks the NoC's single-port eject arbitration:
+    ``"n_first"`` (Hoplite's N-beats-W default) or ``"priority"`` (the
+    criticality-aware W/N pick — see :func:`repro.core.noc.router_cycle`).
+    This IS a model knob: cycle counts change under ``"priority"``.
+
+    ``placement`` names how nodes map onto the PE grid when an engine is
+    handed a raw :class:`~repro.core.graph.DataflowGraph` (a
+    :class:`repro.place.PlacementSpec`, a strategy name, or ``None`` =
+    identity — the partitioner's default round-robin, bit-identical to the
+    pre-placement-subsystem engine). Ignored when the caller passes an
+    already-packed :class:`GraphMemory`.
     """
 
     scheduler: str = "ooo"           # any name in schedulers.REGISTRY
@@ -108,6 +120,8 @@ class OverlayConfig:
     max_cycles: int = 1_000_000
     check_every: int | None = None   # cycles per termination check; None=auto
     use_pallas: bool = False         # fused Pallas select/commit kernels
+    eject_policy: str = "n_first"    # NoC eject arbitration (see noc.py)
+    placement: Any = None            # PlacementSpec | strategy name | None
 
     def __post_init__(self):
         if self.select_latency is not None and self.select_latency < 1:
@@ -118,25 +132,46 @@ class OverlayConfig:
             raise ValueError(
                 f"check_every must be >= 1 cycle per termination check (or "
                 f"None to autotune), got {self.check_every}")
+        if self.eject_policy not in ("n_first", "priority"):
+            raise ValueError(
+                f"eject_policy must be 'n_first' or 'priority', got "
+                f"{self.eject_policy!r}")
+        from ..place.spec import coerce  # lazy: placement specs live in place
+        coerce(self.placement)  # raises on malformed placement values
 
     @property
     def sel_lat(self) -> int:
         return 1 if self.select_latency is None else self.select_latency
 
 
-def resolve_check_every(cfg: OverlayConfig, nx: int, ny: int, L: int) -> int:
+def resolve_check_every(cfg: OverlayConfig, nx: int, ny: int, L: int, *,
+                        backend: str | None = None,
+                        num_devices: int = 1) -> int:
     """Static chunk length for the stepping engine. Any value is cycle-exact;
     the autotune only trades per-chunk overhead against wasted tail cycles
-    (up to K-1 extra cycle evaluations after completion), so it grows with
-    the slot count — bigger graphs run long enough to amortize deep chunks."""
+    (up to K-1 extra cycle evaluations after completion).
+
+    Keyed on graph size AND execution target:
+      * single-device CPU — grows with the slot count (bigger graphs run
+        long enough to amortize deep chunks): 8 / 16 / 32;
+      * multi-device mesh (``num_devices > 1``) — the chunk also amortizes
+        the per-check cross-shard psum/pmin, which dominates regardless of
+        graph size (~1.5x on an 8-device CPU mesh): always 32;
+      * single-device TPU — the compiled chunk body is cheap relative to the
+        host-visible while_loop predicate sync: at least 16.
+
+    ``backend`` defaults to ``jax.default_backend()`` at trace time.
+    """
     if cfg.check_every is not None:
         return cfg.check_every
+    if num_devices > 1:
+        return 32
     slots = nx * ny * L
-    if slots <= 4_096:
-        return 8
-    if slots <= 65_536:
-        return 16
-    return 32
+    base = 8 if slots <= 4_096 else (16 if slots <= 65_536 else 32)
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return max(base, 16)
+    return base
 
 
 class DeviceGraph(dict):
@@ -231,9 +266,10 @@ def make_cycle_fn(
         )
 
         # ---- 2. NoC cycle
-        link_e, link_s, ejects, accepted = noc.router_cycle(
+        link_e, link_s, ejects, accepted, deflected = noc.router_cycle(
             s["link_e"], s["link_s"], inject, shift_e=shift_e, shift_s=shift_s,
             x0=x0, y0=y0, eject_capacity=cfg.eject_capacity,
+            eject_policy=cfg.eject_policy,
         )
 
         # ---- 3. advance fanout cursor; retire drained nodes
@@ -341,7 +377,8 @@ def make_cycle_fn(
             cycle=s["cycle"] + 1,
             delivered=s["delivered"] + all_reduce(n_delivered).astype(jnp.int32),
             deflections=s["deflections"]
-            + all_reduce((inj_valid & ~accepted).sum()).astype(jnp.int32),
+            + all_reduce((inj_valid & ~accepted).sum()
+                         + deflected.sum()).astype(jnp.int32),
             busy_cycles=s["busy_cycles"] + all_reduce(n_fired).astype(jnp.int32),
             done=done,
         )
@@ -447,9 +484,35 @@ def _unpack_result(final, gm: GraphMemory, b: int | None = None) -> SimResult:
     )
 
 
-def simulate(gm: GraphMemory, cfg: OverlayConfig | None = None) -> SimResult:
-    """Run the overlay to completion on a single device."""
+def _as_memory(gm, cfg: OverlayConfig, nx: int | None, ny: int | None):
+    """Accept a packed GraphMemory or a raw DataflowGraph (+ grid shape).
+
+    A raw graph is placed according to ``cfg.placement`` (identity default)
+    with the memory layout the scheduler prefers — the placement subsystem's
+    integration point into every engine."""
+    if isinstance(gm, GraphMemory):
+        return gm
+    if isinstance(gm, DataflowGraph):
+        if nx is None or ny is None:
+            raise ValueError(
+                "simulating a raw DataflowGraph needs the PE grid: "
+                "pass nx= and ny=")
+        from ..place.api import graph_memory_for_config
+
+        return graph_memory_for_config(gm, nx, ny, cfg)
+    raise TypeError(f"expected GraphMemory or DataflowGraph, got {type(gm)}")
+
+
+def simulate(gm: GraphMemory | DataflowGraph, cfg: OverlayConfig | None = None,
+             *, nx: int | None = None, ny: int | None = None) -> SimResult:
+    """Run the overlay to completion on a single device.
+
+    Accepts a packed :class:`GraphMemory`, or a raw
+    :class:`~repro.core.graph.DataflowGraph` plus ``nx``/``ny`` — the graph
+    is then placed per ``cfg.placement`` (see :mod:`repro.place`).
+    """
     cfg = cfg or OverlayConfig()
+    gm = _as_memory(gm, cfg, nx, ny)
     g = device_graph(gm)
     final = _run_jit(dict(g), cfg, gm.nx, gm.ny)
     return _unpack_result(final, gm)
@@ -514,8 +577,10 @@ def _run_batch_jit(g: dict, cfg: OverlayConfig, names: tuple[str, ...],
     return jax.lax.while_loop(cond, freeze_body, state)
 
 
-def simulate_batch(gm: GraphMemory,
-                   cfgs: Sequence[OverlayConfig]) -> list[SimResult]:
+def simulate_batch(gm: GraphMemory | DataflowGraph,
+                   cfgs: Sequence[OverlayConfig], *,
+                   nx: int | None = None,
+                   ny: int | None = None) -> list[SimResult]:
     """Run one overlay graph under many configs as a single XLA program.
 
     The cycle body is vmapped over a stacked config axis (policy id, exposed
@@ -523,8 +588,12 @@ def simulate_batch(gm: GraphMemory,
     sweep compiles once instead of retracing per config. Batch elements that
     finish — or exhaust their own ``max_cycles`` — freeze in place, so every
     returned result is identical to a serial :func:`simulate` call with the
-    same config. Sole requirement: all configs share ``eject_capacity`` (it
-    changes the traced NoC structure).
+    same config. Requirements: all configs share ``eject_capacity``,
+    ``eject_policy``, ``use_pallas``, and ``placement`` (they change the
+    traced structure / the packed memory image).
+
+    A raw :class:`~repro.core.graph.DataflowGraph` (plus ``nx``/``ny``) is
+    placed per the shared ``placement`` before the sweep.
     """
     cfgs = list(cfgs)
     if not cfgs:
@@ -532,9 +601,29 @@ def simulate_batch(gm: GraphMemory,
     eject = {c.eject_capacity for c in cfgs}
     if len(eject) != 1:
         raise ValueError(f"simulate_batch needs a uniform eject_capacity, got {eject}")
+    policy = {c.eject_policy for c in cfgs}
+    if len(policy) != 1:
+        raise ValueError(f"simulate_batch needs a uniform eject_policy, got {policy}")
     pallas = {c.use_pallas for c in cfgs}
     if len(pallas) != 1:
         raise ValueError(f"simulate_batch needs a uniform use_pallas, got {pallas}")
+    placements = {c.placement for c in cfgs}
+    if len(placements) != 1:
+        raise ValueError(
+            f"simulate_batch needs a uniform placement, got {placements}")
+    if not isinstance(gm, GraphMemory):
+        # The packed memory image is shared across the batch, so every
+        # scheduler must want the same slot layout — otherwise elements would
+        # silently diverge from their serial runs. Group configs by layout
+        # (as benchmarks/fig1 does) or pass a pre-built GraphMemory.
+        wants = {schedulers.get(c.scheduler).wants_criticality_order
+                 for c in cfgs}
+        if len(wants) != 1:
+            raise ValueError(
+                "simulate_batch over a raw DataflowGraph needs schedulers "
+                "with a uniform wants_criticality_order; group configs by "
+                "memory layout or pass a pre-built GraphMemory")
+    gm = _as_memory(gm, cfgs[0], nx, ny)
     names: list[str] = []
     for c in cfgs:
         schedulers.get(c.scheduler)  # validate early

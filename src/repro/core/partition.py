@@ -154,36 +154,42 @@ def build_graph_memory(
     nx: int,
     ny: int,
     *,
-    placement: str = "round_robin",
+    placement: str | np.ndarray = "round_robin",
     metric: str = "height",
     criticality_order: bool = True,
     seed: int = 0,
 ) -> GraphMemory:
     """Place ``g`` on an ``nx x ny`` PE grid and pack local memories.
 
+    ``placement`` is a strategy name (see :func:`place_nodes`) or an explicit
+    ``[N]`` node -> PE vector — e.g. one produced by the NoC-aware placer in
+    :mod:`repro.place` (``repro.place.graph_memory`` is the convenience
+    wrapper that resolves a ``PlacementSpec`` and calls this).
+
     ``criticality_order=True`` sorts each PE's local memory in decreasing
     criticality (the paper's static heuristic); ``False`` keeps node-id order
     (what a naive layout would do) — useful for ablations.
     """
+    # Lazy: repro.place depends on core modules; keep the cycle import-free.
+    from ..place.slots import assign_slots
+
     num_pes = nx * ny
     n = g.num_nodes
-    node_pe = place_nodes(g, num_pes, placement, seed)
+    if isinstance(placement, np.ndarray):
+        node_pe = placement.astype(np.int32)
+        if node_pe.shape != (n,):
+            raise ValueError(
+                f"explicit placement must be [{n}] node->PE, got {node_pe.shape}")
+        if n and (node_pe.min() < 0 or node_pe.max() >= num_pes):
+            raise ValueError(
+                f"placement references PEs outside the {nx}x{ny} grid")
+    else:
+        node_pe = place_nodes(g, num_pes, placement, seed)
     c = _criticality(g, metric) if criticality_order else -np.arange(n, dtype=np.int64)
 
-    # Local slot assignment: per PE, decreasing criticality, node id tiebreak.
-    node_slot = np.zeros(n, dtype=np.int32)
-    local_counts = np.zeros(num_pes, dtype=np.int32)
-    order = np.lexsort((np.arange(n), -np.asarray(c, dtype=np.float64), node_pe))
-    # ``order`` is grouped by PE, sorted by -criticality within each group.
-    pos_in_group = np.zeros(n, dtype=np.int32)
-    pe_sorted = node_pe[order]
-    group_start = np.r_[0, np.flatnonzero(np.diff(pe_sorted)) + 1]
-    starts = np.zeros(n, dtype=np.int64)
-    starts[group_start] = group_start
-    starts = np.maximum.accumulate(starts)
-    pos_in_group = (np.arange(n) - starts).astype(np.int32)
-    node_slot[order] = pos_in_group
-    np.add.at(local_counts, node_pe, 1)
+    # Local slot assignment: per PE, decreasing criticality, node id tiebreak
+    # (the paper's node-labeling step — see repro.place.slots).
+    node_slot, local_counts = assign_slots(node_pe, c, num_pes)
 
     lmax = int(local_counts.max(initial=1))
     words = max(1, math.ceil(lmax / FLAGS_PER_WORD))

@@ -1,0 +1,37 @@
+"""repro.place — batched NoC-aware placement & mapping subsystem.
+
+The paper's performance story starts *before* the first simulated cycle: a
+static one-time labeling/placement step decides which PE owns each dataflow
+node and in what criticality order each PE's local memory lists them (§II).
+This package makes that step a first-class, searchable subsystem:
+
+  * :mod:`.spec`   — hashable placement/annealer configs
+    (:class:`PlacementSpec` rides inside ``OverlayConfig``);
+  * :mod:`.cost`   — integer, fully vmapped placement cost model
+    (hop-weighted Hoplite-torus traffic + criticality-weighted slot
+    pressure): thousands of candidates score as one ``jax.vmap`` batch;
+  * :mod:`.anneal` — batched parallel-tempering / threshold-accepting placer
+    whose propose/accept loop runs under ``lax.scan`` with per-replica
+    temperatures; bit-deterministic for a fixed key;
+  * :mod:`.slots`  — the greedy criticality-sorted slot assigner that
+    reproduces the paper's node-labeling memory layout;
+  * :mod:`.api`    — resolution + engine integration (``graph_memory``,
+    cycle-count evaluation incl. the sharded ``simulate_batch_sharded``
+    path, and the config hillclimb behind ``benchmarks/hillclimb.py``).
+
+Identity placement (``OverlayConfig(placement=None)``) is the default
+everywhere and is bit-identical to the pre-subsystem engine — committed
+benchmark cycle counts do not move unless a placement is asked for.
+"""
+from .anneal import PlacementResult, anneal_placement  # noqa: F401
+from .api import (  # noqa: F401
+    HILLCLIMB_SPACE,
+    config_hillclimb,
+    evaluate_placements,
+    graph_memory,
+    graph_memory_for_config,
+    resolve,
+)
+from .cost import CostModel, build_cost_model, torus_hops  # noqa: F401
+from .slots import assign_slots  # noqa: F401
+from .spec import AnnealConfig, PlacementSpec, coerce  # noqa: F401

@@ -1,0 +1,249 @@
+"""Batched parallel-tempering placer: the whole search is one XLA program.
+
+Search shape
+------------
+``replicas`` candidate placements evolve side by side (one ``jax.vmap`` over
+the replica axis). Each replica runs *threshold accepting* — the
+deterministic simulated-annealing variant: a proposed single-node move is
+accepted iff its integer cost delta is ``<= threshold[r]`` — with thresholds
+laddered geometrically from ``t_max`` (hot, explores) down to 0 (cold, pure
+greedy). Every round (``steps`` proposals per replica under ``lax.scan``) a
+parallel-tempering exchange runs across adjacent ladder rungs: the lower-cost
+configuration migrates toward the cold end (the deterministic limit of the
+classic Metropolis swap rule), so discoveries made while hot get polished
+greedily without restarts.
+
+Determinism
+-----------
+Costs, deltas, and accept decisions are all int64 arithmetic on int32 tables
+(:mod:`repro.place.cost`), and proposals come from the counter-based JAX
+PRNG, so for a fixed :class:`repro.place.spec.AnnealConfig` the result is
+bit-identical across runs, machines, and backends. That is what lets
+``BENCH_overlay.json`` gate *cycle counts of annealed placements* in CI.
+
+Move evaluation is O(degree), not O(E): moving node ``v`` only re-prices the
+edges incident to ``v`` (gathered from a padded host-built incidence table)
+plus a two-PE load update — the carried per-PE load vector makes the
+quadratic pressure delta ``2 w (load[q] - load[p] + w)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core.graph import DataflowGraph
+from .cost import CostModel, build_cost_model, edge_endpoints, torus_hops
+from .spec import AnnealConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementResult:
+    """Best placement found plus search diagnostics."""
+
+    node_pe: np.ndarray        # [N] int32 node -> PE
+    cost: int                  # integer model cost of node_pe
+    init_cost: int             # cost of the initial placement
+    replica_costs: np.ndarray  # [R] per-replica best costs (ladder health)
+
+    @property
+    def improvement(self) -> float:
+        return 1.0 - self.cost / max(1, self.init_cost)
+
+
+def incidence_table(g: DataflowGraph, w_edge: np.ndarray):
+    """Padded per-node incident-edge table for O(degree) move deltas.
+
+    Returns ([N, D] neighbor node, [N, D] int32 edge weight — 0 marks
+    padding, [N, D] bool "node is the edge source"). D = max total degree
+    (fanin <= 2, fanout unbounded).
+    """
+    src, dst = edge_endpoints(g)
+    n = g.num_nodes
+    w_edge = np.asarray(w_edge, dtype=np.int32)
+    owner = np.concatenate([src, dst])
+    other = np.concatenate([dst, src]).astype(np.int32)
+    w = np.concatenate([w_edge, w_edge])
+    out = np.concatenate([np.ones_like(src, bool), np.zeros_like(dst, bool)])
+
+    order = np.argsort(owner, kind="stable")
+    owner, other, w, out = owner[order], other[order], w[order], out[order]
+    m = owner.shape[0]
+    # Position of each entry within its owner's group (same trick as the
+    # slot assigner): running index minus the group's start index.
+    starts = np.zeros(m, dtype=np.int64)
+    if m:
+        group_start = np.r_[0, np.flatnonzero(np.diff(owner)) + 1]
+        starts[group_start] = group_start
+        starts = np.maximum.accumulate(starts)
+    pos = np.arange(m) - starts
+
+    d_max = max(1, int(pos.max(initial=0)) + 1)
+    nbr = np.zeros((n, d_max), dtype=np.int32)
+    w_pad = np.zeros((n, d_max), dtype=np.int32)
+    is_out = np.zeros((n, d_max), dtype=bool)
+    nbr[owner, pos] = other
+    w_pad[owner, pos] = w
+    is_out[owner, pos] = out
+    return nbr, w_pad, is_out
+
+
+def _thresholds(acfg: AnnealConfig) -> np.ndarray:
+    """[R] int64 acceptance thresholds: 0 (greedy) then geometric to t_max."""
+    r = acfg.replicas
+    t = float(acfg.t_max)
+    if r == 1 or t <= 0:
+        return np.zeros(r, dtype=np.int64)
+    if r == 2:
+        ladder = np.array([t])          # single hot rung sits AT t_max
+    else:
+        ladder = np.geomspace(min(2.0, t), t, r - 1)
+    return np.concatenate([[0], np.rint(ladder).astype(np.int64)])
+
+
+@functools.partial(jax.jit, static_argnames=("nx", "ny", "rounds", "steps",
+                                             "pressure_weight"))
+def _anneal_jit(init_pe, nbr, w_inc, is_out, w_node, thresholds, key,
+                *, nx: int, ny: int, rounds: int, steps: int,
+                pressure_weight: int):
+    R = thresholds.shape[0]
+    N = init_pe.shape[0]
+    P = nx * ny
+    pw = jnp.int64(pressure_weight)
+
+    def loads_of(pe):
+        return jnp.zeros(P, jnp.int64).at[pe].add(w_node.astype(jnp.int64))
+
+    def full_cost(pe):
+        # Each incidence entry appears once per endpoint; out-edges only, so
+        # every edge is counted exactly once.
+        nbr_pe = pe[jnp.clip(nbr, 0, N - 1)]
+        hop = torus_hops(pe[:, None], nbr_pe, nx, ny)
+        traffic = jnp.sum(jnp.where(is_out, w_inc, 0).astype(jnp.int64)
+                          * hop.astype(jnp.int64))
+        loads = loads_of(pe)
+        return traffic + pw * jnp.sum(loads * loads)
+
+    def propose(st, key, thresh):
+        pe, load, cost = st
+        k1, k2 = jax.random.split(key)
+        # int32 dtype pinned: the drawn sequence must not depend on the
+        # ambient x64 mode (bit-determinism contract).
+        i = jax.random.randint(k1, (), 0, N, dtype=jnp.int32)
+        q = jax.random.randint(k2, (), 0, P, dtype=jnp.int32)
+        p = pe[i]
+
+        nb, wv, out = nbr[i], w_inc[i], is_out[i]
+        nbr_pe = pe[nb]
+        old_h = jnp.where(out, torus_hops(p, nbr_pe, nx, ny),
+                          torus_hops(nbr_pe, p, nx, ny))
+        new_h = jnp.where(out, torus_hops(q, nbr_pe, nx, ny),
+                          torus_hops(nbr_pe, q, nx, ny))
+        d_traffic = jnp.sum(wv.astype(jnp.int64)
+                            * (new_h - old_h).astype(jnp.int64))
+        wn = w_node[i].astype(jnp.int64)
+        d_pressure = 2 * wn * (load[q] - load[p] + wn)
+        delta = d_traffic + pw * d_pressure
+
+        accept = (delta <= thresh) & (p != q)
+        pe = pe.at[i].set(jnp.where(accept, q, p))
+        load = load.at[p].add(jnp.where(accept, -wn, 0))
+        load = load.at[q].add(jnp.where(accept, wn, 0))
+        return (pe, load, cost + jnp.where(accept, delta, jnp.int64(0)))
+
+    def sweep(st_keys, _):
+        st, keys = st_keys
+        new_keys = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+        step_keys, keys = new_keys[:, 0], new_keys[:, 1]
+        st = jax.vmap(propose)(st, step_keys, thresholds)
+        return (st, keys), None
+
+    def pt_swap(st, costs, parity):
+        """Deterministic replica exchange: the lower-cost configuration of
+        each adjacent ladder pair migrates toward the cold (low-r) end."""
+        r = jnp.arange(R)
+        off = r - parity
+        partner = jnp.where(off < 0, r,
+                            jnp.where(off % 2 == 0, r + 1, r - 1))
+        partner = jnp.clip(partner, 0, R - 1)
+        lo = jnp.minimum(r, partner)
+        hi = jnp.maximum(r, partner)
+        swap = (partner != r) & (costs[hi] < costs[lo])
+        take = jnp.where(swap, partner, r)
+        return jax.tree.map(lambda a: a[take], st), costs[take]
+
+    def round_body(carry, parity):
+        st, keys, best_pe, best_cost = carry
+        (st, keys), _ = jax.lax.scan(sweep, (st, keys), None, length=steps)
+        pe, load, cost = st
+        better = cost < best_cost
+        best_cost = jnp.where(better, cost, best_cost)
+        best_pe = jnp.where(better[:, None], pe, best_pe)
+        pe, cost = pt_swap(pe, cost, parity)
+        load = jax.vmap(loads_of)(pe)
+        return ((pe, load, cost), keys, best_pe, best_cost), None
+
+    pe0 = jnp.broadcast_to(init_pe, (R, N)).astype(jnp.int32)
+    load0 = jax.vmap(loads_of)(pe0)
+    cost0 = jax.vmap(full_cost)(pe0)
+    keys = jax.random.split(key, R)
+    carry = ((pe0, load0, cost0), keys, pe0, cost0)
+    parities = jnp.arange(rounds, dtype=jnp.int32) % 2
+    (_, _, best_pe, best_cost), _ = jax.lax.scan(round_body, carry, parities)
+    return best_pe, best_cost, cost0[0]
+
+
+def anneal_placement(
+    g: DataflowGraph,
+    nx: int,
+    ny: int,
+    acfg: AnnealConfig | None = None,
+    *,
+    metric: str = "height",
+    init: np.ndarray | None = None,
+    model: CostModel | None = None,
+) -> PlacementResult:
+    """Search a node -> PE placement for ``g`` on the ``nx x ny`` torus.
+
+    ``init`` defaults to a uniform-random placement drawn from
+    ``acfg.seed`` — the baseline the annealer is guaranteed (by best-so-far
+    tracking that includes the init) to never score worse than.
+    """
+    acfg = acfg or AnnealConfig()
+    num_pes = nx * ny
+    model = model or build_cost_model(
+        g, nx, ny, metric=metric, crit_scale=acfg.crit_scale,
+        pressure_weight=acfg.pressure_weight)
+    if init is None:
+        rng = np.random.default_rng(acfg.seed)
+        init = rng.integers(0, num_pes, size=g.num_nodes).astype(np.int32)
+    init = np.asarray(init, dtype=np.int32)
+    if init.shape != (g.num_nodes,):
+        raise ValueError(f"init must be [{g.num_nodes}] node->PE, got {init.shape}")
+    if init.size and (init.min() < 0 or init.max() >= num_pes):
+        raise ValueError("init placement references PEs outside the grid")
+
+    w_edge = np.asarray(model.w_edge)
+    nbr, w_inc, is_out = incidence_table(g, w_edge)
+    # Scoped x64: cost totals are int64 sums of squared loads — they must not
+    # wrap on big graphs, and callers shouldn't need global jax_enable_x64.
+    with enable_x64():
+        best_pe, best_cost, init_cost = _anneal_jit(
+            jnp.asarray(init), jnp.asarray(nbr), jnp.asarray(w_inc),
+            jnp.asarray(is_out), jnp.asarray(np.asarray(model.w_node)),
+            jnp.asarray(_thresholds(acfg)), jax.random.key(acfg.seed),
+            nx=nx, ny=ny, rounds=acfg.rounds, steps=acfg.steps,
+            pressure_weight=acfg.pressure_weight)
+    best_pe = np.asarray(best_pe)
+    best_cost = np.asarray(best_cost)
+    b = int(best_cost.argmin())
+    return PlacementResult(
+        node_pe=best_pe[b].astype(np.int32),
+        cost=int(best_cost[b]),
+        init_cost=int(init_cost),
+        replica_costs=best_cost.astype(np.int64),
+    )

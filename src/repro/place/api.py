@@ -1,0 +1,224 @@
+"""Placement resolution + overlay integration entry points.
+
+This is the layer the simulator and the benchmarks talk to:
+
+  * :func:`resolve` turns a :class:`~repro.place.spec.PlacementSpec` (or a
+    strategy name, or ``None`` = identity) into a concrete ``[N]`` node -> PE
+    vector;
+  * :func:`graph_memory` / :func:`graph_memory_for_config` pack a placed
+    graph into the :class:`~repro.core.partition.GraphMemory` the engines
+    consume (criticality-sorted slots via :mod:`repro.place.slots`);
+  * :func:`evaluate_placements` scores candidate placements by *simulated
+    cycle count* — single device or sharded over a mesh, batching the config
+    axis through ``simulate_batch`` / ``simulate_batch_sharded``;
+  * :func:`config_hillclimb` is the greedy coordinate-descent search over
+    (placement x scheduler x select latency x eject capacity) that
+    ``benchmarks/hillclimb.py --overlay`` fronts.
+
+Heavyweight imports (overlay, distributed) are deferred into the functions:
+``core.overlay`` itself imports this package for placement threading, so the
+module level must stay cycle-free.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..core.graph import DataflowGraph
+from .anneal import anneal_placement
+from .spec import PlacementSpec, coerce
+
+
+def resolve(g: DataflowGraph, nx: int, ny: int, placement=None) -> np.ndarray:
+    """[N] node -> PE vector for ``placement`` on the ``nx x ny`` grid.
+
+    ``placement`` is a PlacementSpec, a strategy name, an explicit [N] array
+    (returned as-is), or ``None`` (identity = the partitioner's default
+    round-robin — the layout all committed benchmark numbers use).
+    """
+    if isinstance(placement, np.ndarray):
+        return placement.astype(np.int32)
+    from ..core import partition
+
+    spec = coerce(placement)
+    num_pes = nx * ny
+    if spec.strategy == "anneal":
+        init = None  # anneal_placement defaults to random-from-seed
+        if spec.init != "random":
+            init = resolve(g, nx, ny, PlacementSpec(strategy=spec.init,
+                                                    seed=spec.seed))
+        return anneal_placement(
+            g, nx, ny, spec.anneal_config, metric=spec.metric,
+            init=init).node_pe
+    strategy = "round_robin" if spec.strategy == "identity" else spec.strategy
+    return partition.place_nodes(g, num_pes, strategy, seed=spec.seed)
+
+
+def graph_memory(g: DataflowGraph, nx: int, ny: int, placement=None, *,
+                 criticality_order: bool = True, metric: str | None = None):
+    """Resolve ``placement`` and pack the per-PE graph memory."""
+    from ..core import partition
+
+    spec = coerce(placement) if not isinstance(placement, np.ndarray) else None
+    node_pe = resolve(g, nx, ny, placement)
+    return partition.build_graph_memory(
+        g, nx, ny, placement=node_pe,
+        metric=metric or (spec.metric if spec else "height"),
+        criticality_order=criticality_order)
+
+
+def graph_memory_for_config(g: DataflowGraph, nx: int, ny: int, cfg):
+    """GraphMemory for an :class:`~repro.core.overlay.OverlayConfig`:
+    honors ``cfg.placement`` and the scheduler's preferred memory layout."""
+    from ..core import schedulers
+
+    wants = schedulers.get(cfg.scheduler).wants_criticality_order
+    return graph_memory(g, nx, ny, cfg.placement, criticality_order=wants)
+
+
+def evaluate_placements(g: DataflowGraph, nx: int, ny: int, placements,
+                        cfgs=None, mesh=None) -> dict:
+    """Score candidate placements by simulated cycle count.
+
+    Args:
+      placements: ``{name: spec | strategy | [N] array}``.
+      cfgs: one OverlayConfig, a sequence of them (swept per placement via
+        the batched engine), or None for the default config.
+      mesh: optional ``jax.sharding.Mesh`` — evaluation then runs through
+        ``simulate_sharded`` / ``simulate_batch_sharded`` with the PE grid
+        tiled over the mesh (placement evaluation for overlays larger than
+        one device).
+
+    Returns:
+      ``{name: SimResult}`` (or ``{name: [SimResult, ...]}`` with a config
+      sweep).
+    """
+    from ..core import distributed, overlay, schedulers
+
+    single = cfgs is None or not isinstance(cfgs, (list, tuple))
+    cfg_list = [cfgs or overlay.OverlayConfig()] if single else list(cfgs)
+    wants_set = {schedulers.get(c.scheduler).wants_criticality_order
+                 for c in cfg_list}
+    if len(wants_set) != 1:
+        # One packed memory per placement serves the whole sweep; mixed
+        # layout preferences would silently skew non-first schedulers.
+        raise ValueError(
+            "evaluate_placements needs schedulers with a uniform "
+            "wants_criticality_order per call; split the config sweep by "
+            "memory layout")
+    wants = wants_set.pop()
+    out = {}
+    for name, placement in placements.items():
+        gm = graph_memory(g, nx, ny, placement, criticality_order=wants)
+        if mesh is None:
+            res = overlay.simulate_batch(gm, cfg_list)
+        else:
+            res = distributed.simulate_batch_sharded(gm, mesh, cfg_list)
+        out[name] = res[0] if single else res
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Greedy coordinate-descent over the overlay config space (incl. placement).
+# ---------------------------------------------------------------------------
+
+#: Axes of the overlay-config search space; ``scheduler`` is filled from the
+#: policy registry at call time.
+HILLCLIMB_SPACE = {
+    "placement": ["round_robin", "clustered", "bulk_clustered",
+                  "critical_chain", "anneal"],
+    "scheduler": None,
+    "select_latency": [None, 1, 2, 4],
+    "eject_capacity": [1, 2],
+}
+
+
+def config_hillclimb(g: DataflowGraph, nx: int, ny: int, *,
+                     max_cycles: int = 4_000_000, seed: int = 0,
+                     space: dict | None = None) -> dict:
+    """Greedy coordinate descent, one batched program per neighborhood group.
+
+    Each step proposes every single-axis change to the current config;
+    unseen neighbors sharing a (placement, eject capacity, memory layout)
+    triple evaluate through ONE ``simulate_batch`` call. Placement axes
+    resolve through :func:`resolve` (so ``"anneal"`` runs the placer once
+    and reuses the result). Returns a machine-readable record:
+    trajectory, best config, best cycles, evaluation count, wall seconds.
+    """
+    import dataclasses
+
+    from ..core import schedulers
+    from ..core.overlay import OverlayConfig, simulate_batch
+
+    space = dict(space or HILLCLIMB_SPACE)
+    if space.get("scheduler") is None:
+        space["scheduler"] = sorted(schedulers.REGISTRY)
+
+    placed: dict = {}    # strategy -> node_pe
+    gms: dict = {}       # (strategy, wants_criticality_order) -> GraphMemory
+
+    def gm_for(strategy, wants):
+        key = (strategy, wants)
+        if key not in gms:
+            if strategy not in placed:
+                placed[strategy] = resolve(
+                    g, nx, ny, PlacementSpec(strategy=strategy, seed=seed))
+            gms[key] = graph_memory(g, nx, ny, placed[strategy],
+                                    criticality_order=wants)
+        return gms[key]
+
+    n_evals = [0]
+    seen: dict = {}  # config tuple -> cycles (configs revisit across steps)
+
+    def evaluate(points):
+        """[{axis: value}] -> [cycles] (inf when the config never finishes,
+        so the search just steps around it)."""
+        key = lambda pt: tuple(sorted(pt.items(), key=lambda kv: kv[0]))
+        cycles = [seen.get(key(pt)) for pt in points]
+        groups: dict = {}
+        for i, pt in enumerate(points):
+            if cycles[i] is None:
+                wants = schedulers.get(pt["scheduler"]).wants_criticality_order
+                groups.setdefault(
+                    (pt["placement"], pt["eject_capacity"], wants), []).append(i)
+        for (strategy, eject, wants), idxs in groups.items():
+            n_evals[0] += len(idxs)
+            cfgs = [OverlayConfig(scheduler=points[i]["scheduler"],
+                                  select_latency=points[i]["select_latency"],
+                                  eject_capacity=eject,
+                                  max_cycles=max_cycles) for i in idxs]
+            for i, r in zip(idxs, simulate_batch(gm_for(strategy, wants), cfgs)):
+                c = r.cycles if r.done else float("inf")
+                cycles[i] = seen[key(points[i])] = c
+        return cycles
+
+    def _finite(c):
+        return None if c == float("inf") else c
+
+    current = dict(placement="round_robin", scheduler="ooo",
+                   select_latency=None, eject_capacity=1)
+    t0 = time.time()
+    best = evaluate([current])[0]
+    trajectory = [{"config": dict(current), "cycles": _finite(best)}]
+    while True:
+        neighbors = []
+        for field, values in space.items():
+            for v in values:
+                if v != current[field]:
+                    neighbors.append(dict(current, **{field: v}))
+        res = evaluate(neighbors)
+        j = min(range(len(neighbors)), key=res.__getitem__)
+        if res[j] >= best:
+            break
+        current, best = neighbors[j], res[j]
+        trajectory.append({"config": dict(current), "cycles": _finite(best)})
+
+    return {
+        "space": {k: [str(v) for v in vs] for k, vs in space.items()},
+        "trajectory": trajectory,
+        "best_config": current,
+        "best_cycles": _finite(best),
+        "evaluations": n_evals[0],
+        "wall_s": round(time.time() - t0, 3),
+    }

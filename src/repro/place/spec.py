@@ -1,0 +1,108 @@
+"""Hashable placement specifications.
+
+These are the *configuration* half of :mod:`repro.place`: plain frozen
+dataclasses with scalar fields only, so a spec can ride inside
+:class:`repro.core.overlay.OverlayConfig` (a ``jax.jit`` static argument) and
+key memoization caches. The *mechanism* half (cost model, annealer, slot
+assigner) lives in the sibling modules and consumes these specs.
+
+Deliberately import-free of the rest of the package: ``core.overlay`` imports
+this module at trace time, so it must never pull the simulator back in.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: Strategies resolvable without search: the identity default plus every
+#: static heuristic in :func:`repro.core.partition.place_nodes`.
+STATIC_STRATEGIES = (
+    "identity", "round_robin", "blocked", "random", "clustered",
+    "bulk_clustered", "critical_chain",
+)
+SEARCH_STRATEGIES = ("anneal",)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnnealConfig:
+    """Knobs of the batched parallel-tempering placer (:mod:`.anneal`).
+
+    The accept rule is *threshold accepting* (Dueck & Scheuer's deterministic
+    simulated-annealing variant): replica ``r`` accepts any move whose integer
+    cost delta is ``<= threshold[r]``. Thresholds ladder geometrically from
+    ``t_max`` down to 0 (replica 0 is a pure greedy descender) and stay fixed
+    while parallel-tempering swaps migrate good configurations toward the
+    cold end every round. With integer costs this makes the whole search
+    bit-deterministic across machines and XLA versions — a requirement for
+    the CI-gated placement cycle counts in ``BENCH_overlay.json``.
+    """
+
+    replicas: int = 8          # parallel-tempering ladder size
+    rounds: int = 24           # swap/best-tracking epochs
+    steps: int = 512           # proposals per replica per round (lax.scan)
+    t_max: float = 64.0        # hottest acceptance threshold (integer-cost units)
+    pressure_weight: int = 1   # slot-pressure term weight (integer)
+    crit_scale: int = 3        # max extra integer weight for critical edges/nodes
+    seed: int = 0              # PRNG key for proposals + the random init
+
+    def __post_init__(self):
+        if self.replicas < 1 or self.rounds < 1 or self.steps < 1:
+            raise ValueError(f"replicas/rounds/steps must be >= 1, got {self}")
+        if self.t_max < 0:
+            raise ValueError(f"t_max must be >= 0, got {self.t_max}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSpec:
+    """Names how nodes map onto the PE grid.
+
+    ``strategy`` is ``"identity"`` (keep the partitioner's default
+    round-robin — the layout every committed benchmark cycle count was
+    recorded with), any static heuristic from
+    :func:`repro.core.partition.place_nodes`, or ``"anneal"`` (NoC-aware
+    search: random init from ``seed``, improved by :func:`repro.place.anneal`
+    under ``anneal`` knobs). ``metric`` picks the criticality labeling used
+    for slot assignment and the cost model's weights.
+    """
+
+    strategy: str = "identity"
+    seed: int = 0
+    metric: str = "height"
+    anneal: AnnealConfig | None = None
+    #: starting point for "anneal": "random" (the baseline the placer is
+    #: guaranteed to never score worse than) or any static strategy.
+    init: str = "random"
+
+    def __post_init__(self):
+        known = STATIC_STRATEGIES + SEARCH_STRATEGIES
+        if self.strategy not in known:
+            raise ValueError(
+                f"unknown placement strategy {self.strategy!r}; known: {known}")
+        if self.init not in STATIC_STRATEGIES:
+            raise ValueError(
+                f"unknown anneal init strategy {self.init!r}; "
+                f"known: {STATIC_STRATEGIES}")
+        if self.anneal is not None and not isinstance(self.anneal, AnnealConfig):
+            raise TypeError(f"anneal must be an AnnealConfig, got {self.anneal!r}")
+
+    @property
+    def anneal_config(self) -> AnnealConfig:
+        return self.anneal if self.anneal is not None else AnnealConfig(seed=self.seed)
+
+
+IDENTITY = PlacementSpec()
+
+
+def coerce(placement) -> PlacementSpec:
+    """Normalize the ``OverlayConfig.placement`` field to a PlacementSpec.
+
+    Accepts ``None`` (identity), a strategy-name string, or a spec.
+    """
+    if placement is None:
+        return IDENTITY
+    if isinstance(placement, str):
+        return PlacementSpec(strategy=placement)
+    if isinstance(placement, PlacementSpec):
+        return placement
+    raise TypeError(
+        f"placement must be None, a strategy name, or a PlacementSpec; "
+        f"got {placement!r}")
