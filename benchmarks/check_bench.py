@@ -7,6 +7,14 @@ that *shrank* are reported as improvements (update the committed snapshot to
 lock them in). Wall-clock numbers are machine-dependent, so wall/throughput
 deltas are printed for the log but never block (shared CI runners).
 
+The ``surrogate`` section additionally carries two *quality floors* (also
+blocking): held-out Spearman rank correlation >= SPEARMAN_FLOOR per rank row,
+and the prediction-pruned best placement within PRUNE_GAP_MAX of the
+exhaustive best. These are floors rather than exact diffs because the ridge
+solve is float64 — integer features make it stable to reproduce, but the last
+bits (and thus near-tie ranks) may differ across BLAS builds, unlike the
+integer cycle counts which must match bit-exactly.
+
 Usage:  python benchmarks/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
@@ -14,15 +22,22 @@ from __future__ import annotations
 import json
 import sys
 
+#: minimum held-out Spearman(predicted, simulated cycles) per surrogate row.
+SPEARMAN_FLOOR = 0.8
+#: max pruned_best / exhaustive_best: the top-k predicted candidates must
+#: contain a placement within 5% of the exhaustive-simulation best.
+PRUNE_GAP_MAX = 1.05
+
 
 def _cycle_counts(bench: dict) -> dict[str, int]:
     """Flatten every tracked cycle count to {metric_name: cycles}."""
     out: dict[str, int] = {}
     flat_rows = list(bench.get("fig1", []))
-    # Placement & eject sections carry per-row cycles_* keys like fig1 does
-    # (identity/random/annealed placements; n_first/priority arbitration) —
-    # all deterministic simulation semantics, all blocking.
-    for section in ("placement", "eject"):
+    # Placement / eject / surrogate sections carry per-row cycles_* keys like
+    # fig1 does (identity/random/annealed placements; n_first/priority
+    # arbitration; multilevel coarsen->anneal->refine vs round-robin) — all
+    # deterministic simulation semantics, all blocking.
+    for section in ("placement", "eject", "surrogate"):
         flat_rows += bench.get(section, {}).get("rows", [])
     for row in flat_rows:
         for key, val in row.items():
@@ -39,10 +54,37 @@ def _cycle_counts(bench: dict) -> dict[str, int]:
     return out
 
 
+def _surrogate_quality(baseline: dict, fresh: dict) -> list[str]:
+    """Blocking quality-floor violations in the fresh surrogate section.
+
+    Rank rows carry no ``cycles_*`` keys, so the missing-row protection in
+    the cycle diff never covers them — a baseline quality row that vanishes
+    from the fresh run must fail here, or the Spearman/prune gates would
+    silently disappear.
+    """
+    bad = []
+    fresh_rows = {row["name"]: row
+                  for row in fresh.get("surrogate", {}).get("rows", [])}
+    for row in baseline.get("surrogate", {}).get("rows", []):
+        if ("spearman" in row or "prune_gap" in row) \
+                and row["name"] not in fresh_rows:
+            bad.append(f"{row['name']}: quality row missing from fresh run")
+    for row in fresh_rows.values():
+        if "spearman" in row and row["spearman"] < SPEARMAN_FLOOR:
+            bad.append(f"{row['name']}: spearman {row['spearman']} "
+                       f"< floor {SPEARMAN_FLOOR}")
+        if "prune_gap" in row and row["prune_gap"] > PRUNE_GAP_MAX:
+            bad.append(f"{row['name']}: prune_gap {row['prune_gap']} "
+                       f"> max {PRUNE_GAP_MAX} "
+                       f"(pruned_best {row.get('pruned_best')} vs "
+                       f"exhaustive_best {row.get('exhaustive_best')})")
+    return bad
+
+
 def _wall_times(bench: dict) -> dict[str, float]:
     out: dict[str, float] = {}
     rows = list(bench.get("fig1", []))
-    for section in ("placement", "eject"):
+    for section in ("placement", "eject", "surrogate"):
         rows += bench.get(section, {}).get("rows", [])
     for row in rows:
         out[f"{row['name']}.wall_s"] = float(row["wall_s"])
@@ -83,10 +125,18 @@ def main(baseline_path: str, fresh_path: str) -> int:
         delta = "" if base is None else f" (baseline {base})"
         print(f"WALL    {name} = {new}{delta}")
 
-    if regressions:
-        print(f"\nFAIL: {len(regressions)} cycle-count regression(s):")
-        for line in regressions:
-            print(f"  {line}")
+    quality = _surrogate_quality(baseline, fresh)
+    failures = regressions + quality
+    if failures:
+        if regressions:
+            print(f"\nFAIL: {len(regressions)} cycle-count regression(s):")
+            for line in regressions:
+                print(f"  {line}")
+        if quality:
+            print(f"\nFAIL: {len(quality)} surrogate quality-floor "
+                  f"violation(s):")
+            for line in quality:
+                print(f"  {line}")
         return 1
     print(f"\nOK: {len(base_cyc)} tracked cycle counts, no regressions.")
     return 0

@@ -87,6 +87,16 @@ def main() -> None:
     for r in bench["eject"]["rows"]:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
+    # Surrogate subsystem: held-out rank correlation + prediction-pruned
+    # search quality per fig1 workload, and the multilevel
+    # coarsen->anneal->refine placement at >= 100K nodes vs round-robin.
+    # check_bench gates the Spearman floor, the pruning gap, and the
+    # multilevel cycle counts.
+    bench["surrogate"] = {"rows": placement_bench.run_surrogate()
+                          + placement_bench.run_multilevel()}
+    for r in bench["surrogate"]["rows"]:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
     from benchmarks import roofline
     rows = roofline.run("single")
     bench["roofline"] = rows or []

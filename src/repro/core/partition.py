@@ -149,6 +149,20 @@ def place_nodes_clustered_ids(n: int, num_pes: int, cluster: int = 16) -> np.nda
     return ((cx * ts + wx) * ny + (cy * ts + wy)).astype(np.int32)
 
 
+def packed_shape(g: DataflowGraph, node_pe: np.ndarray,
+                 num_pes: int) -> tuple[int, int]:
+    """Pre-padding ``(lmax, emax)`` that :func:`build_graph_memory` packs for
+    ``node_pe`` — the single source of the shape derivation, shared with
+    ``repro.place.uniform_graph_memories`` so its identical-shapes guarantee
+    cannot drift out of sync with the packing rule."""
+    node_pe = np.asarray(node_pe)
+    counts = np.zeros(num_pes, dtype=np.int64)
+    np.add.at(counts, node_pe, 1)
+    ecounts = np.zeros(num_pes, dtype=np.int64)
+    np.add.at(ecounts, node_pe, g.fanout_count().astype(np.int64))
+    return int(counts.max(initial=1)), max(1, int(ecounts.max(initial=1)))
+
+
 def build_graph_memory(
     g: DataflowGraph,
     nx: int,
@@ -158,6 +172,8 @@ def build_graph_memory(
     metric: str = "height",
     criticality_order: bool = True,
     seed: int = 0,
+    min_lmax: int = 0,
+    min_emax: int = 0,
 ) -> GraphMemory:
     """Place ``g`` on an ``nx x ny`` PE grid and pack local memories.
 
@@ -169,6 +185,16 @@ def build_graph_memory(
     ``criticality_order=True`` sorts each PE's local memory in decreasing
     criticality (the paper's static heuristic); ``False`` keeps node-id order
     (what a naive layout would do) — useful for ablations.
+
+    ``min_lmax`` / ``min_emax`` pad the packed slot depth / per-PE edge
+    capacity beyond what this placement needs, so memories packed for
+    *different* placements of the same graph come out with identical array
+    shapes — the jitted engines then reuse one compiled program across the
+    whole candidate set (see ``repro.place.evaluate_placements``). Padding
+    slots are ``valid=False`` and padding edge words are never addressed, so
+    results are unchanged — but note the ``scan`` policy *models* its select
+    latency as the RDY word count, so a deeper padded memory is a
+    (deliberately) slower scanned memory under that policy.
     """
     # Lazy: repro.place depends on core modules; keep the cycle import-free.
     from ..place.slots import assign_slots
@@ -191,7 +217,8 @@ def build_graph_memory(
     # (the paper's node-labeling step — see repro.place.slots).
     node_slot, local_counts = assign_slots(node_pe, c, num_pes)
 
-    lmax = int(local_counts.max(initial=1))
+    lmax_nat, emax_nat = packed_shape(g, node_pe, num_pes)
+    lmax = max(lmax_nat, int(min_lmax))
     words = max(1, math.ceil(lmax / FLAGS_PER_WORD))
     lmax_padded = words * FLAGS_PER_WORD
 
@@ -210,9 +237,7 @@ def build_graph_memory(
     fo_cnt_global = g.fanout_count()
     fo_count = per_node(fo_cnt_global, 0, np.int32)
     fo_base = np.zeros((num_pes, lmax_padded), dtype=np.int32)
-    ecounts = np.zeros(num_pes, dtype=np.int64)
-    np.add.at(ecounts, node_pe, fo_cnt_global.astype(np.int64))
-    emax = max(1, int(ecounts.max(initial=1)))
+    emax = max(emax_nat, int(min_emax))
 
     e_dst_pe = np.zeros((num_pes, emax), dtype=np.int32)
     e_dst_slot = np.zeros((num_pes, emax), dtype=np.int32)

@@ -13,6 +13,9 @@ This package makes that step a first-class, searchable subsystem:
   * :mod:`.anneal` — batched parallel-tempering / threshold-accepting placer
     whose propose/accept loop runs under ``lax.scan`` with per-replica
     temperatures; bit-deterministic for a fixed key;
+  * :mod:`.coarsen` — multilevel coarsen -> anneal -> refine pipeline:
+    criticality-aware clustering collapses the graph ~16-64x so the annealer
+    moves whole clusters — placement search at fig1-full (~470K node) scale;
   * :mod:`.slots`  — the greedy criticality-sorted slot assigner that
     reproduces the paper's node-labeling memory layout;
   * :mod:`.api`    — resolution + engine integration (``graph_memory``,
@@ -23,7 +26,11 @@ Identity placement (``OverlayConfig(placement=None)``) is the default
 everywhere and is bit-identical to the pre-subsystem engine — committed
 benchmark cycle counts do not move unless a placement is asked for.
 """
-from .anneal import PlacementResult, anneal_placement  # noqa: F401
+from .anneal import (  # noqa: F401
+    PlacementResult,
+    anneal_placement,
+    anneal_tables,
+)
 from .api import (  # noqa: F401
     HILLCLIMB_SPACE,
     config_hillclimb,
@@ -31,7 +38,15 @@ from .api import (  # noqa: F401
     graph_memory,
     graph_memory_for_config,
     resolve,
+    simulate_placements,
+    uniform_graph_memories,
 )
-from .cost import CostModel, build_cost_model, torus_hops  # noqa: F401
+from .coarsen import (  # noqa: F401
+    MultilevelResult,
+    cluster_nodes,
+    multilevel_anneal,
+    quotient_tables,
+)
+from .cost import CostModel, build_cost_model, edge_tables, torus_hops  # noqa: F401
 from .slots import assign_slots  # noqa: F401
 from .spec import AnnealConfig, PlacementSpec, coerce  # noqa: F401

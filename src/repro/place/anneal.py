@@ -63,7 +63,20 @@ def incidence_table(g: DataflowGraph, w_edge: np.ndarray):
     (fanin <= 2, fanout unbounded).
     """
     src, dst = edge_endpoints(g)
-    n = g.num_nodes
+    return incidence_from_edges(src, dst, w_edge, g.num_nodes)
+
+
+def incidence_from_edges(src: np.ndarray, dst: np.ndarray,
+                         w_edge: np.ndarray, n: int):
+    """:func:`incidence_table` over flat ``(src, dst)`` edge arrays.
+
+    The annealer itself only needs incident-edge tables, not a
+    :class:`DataflowGraph` — this is the entry point the multilevel
+    coarsener (:mod:`repro.place.coarsen`) uses to anneal *cluster*-level
+    quotient graphs with the very same jitted search kernel.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
     w_edge = np.asarray(w_edge, dtype=np.int32)
     owner = np.concatenate([src, dst])
     other = np.concatenate([dst, src]).astype(np.int32)
@@ -197,6 +210,58 @@ def _anneal_jit(init_pe, nbr, w_inc, is_out, w_node, thresholds, key,
     return best_pe, best_cost, cost0[0]
 
 
+def anneal_tables(
+    n: int,
+    nx: int,
+    ny: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    w_edge: np.ndarray,
+    w_node: np.ndarray,
+    acfg: AnnealConfig | None = None,
+    *,
+    init: np.ndarray | None = None,
+) -> PlacementResult:
+    """Anneal an ``[n]`` item -> PE placement from flat integer edge tables.
+
+    ``n`` items (graph nodes — or node *clusters* in the multilevel pipeline)
+    connected by ``(src, dst)`` edges of weight ``w_edge``, with per-item
+    weights ``w_node``, are placed on the ``nx x ny`` torus. This is the
+    graph-free core of :func:`anneal_placement`: same jitted kernel, same
+    determinism contract, no :class:`DataflowGraph` needed.
+    """
+    acfg = acfg or AnnealConfig()
+    num_pes = nx * ny
+    if init is None:
+        rng = np.random.default_rng(acfg.seed)
+        init = rng.integers(0, num_pes, size=n).astype(np.int32)
+    init = np.asarray(init, dtype=np.int32)
+    if init.shape != (n,):
+        raise ValueError(f"init must be [{n}] item->PE, got {init.shape}")
+    if init.size and (init.min() < 0 or init.max() >= num_pes):
+        raise ValueError("init placement references PEs outside the grid")
+
+    nbr, w_inc, is_out = incidence_from_edges(src, dst, w_edge, n)
+    # Scoped x64: cost totals are int64 sums of squared loads — they must not
+    # wrap on big graphs, and callers shouldn't need global jax_enable_x64.
+    with enable_x64():
+        best_pe, best_cost, init_cost = _anneal_jit(
+            jnp.asarray(init), jnp.asarray(nbr), jnp.asarray(w_inc),
+            jnp.asarray(is_out), jnp.asarray(np.asarray(w_node, np.int32)),
+            jnp.asarray(_thresholds(acfg)), jax.random.key(acfg.seed),
+            nx=nx, ny=ny, rounds=acfg.rounds, steps=acfg.steps,
+            pressure_weight=acfg.pressure_weight)
+    best_pe = np.asarray(best_pe)
+    best_cost = np.asarray(best_cost)
+    b = int(best_cost.argmin())
+    return PlacementResult(
+        node_pe=best_pe[b].astype(np.int32),
+        cost=int(best_cost[b]),
+        init_cost=int(init_cost),
+        replica_costs=best_cost.astype(np.int64),
+    )
+
+
 def anneal_placement(
     g: DataflowGraph,
     nx: int,
@@ -214,36 +279,10 @@ def anneal_placement(
     tracking that includes the init) to never score worse than.
     """
     acfg = acfg or AnnealConfig()
-    num_pes = nx * ny
     model = model or build_cost_model(
         g, nx, ny, metric=metric, crit_scale=acfg.crit_scale,
         pressure_weight=acfg.pressure_weight)
-    if init is None:
-        rng = np.random.default_rng(acfg.seed)
-        init = rng.integers(0, num_pes, size=g.num_nodes).astype(np.int32)
-    init = np.asarray(init, dtype=np.int32)
-    if init.shape != (g.num_nodes,):
-        raise ValueError(f"init must be [{g.num_nodes}] node->PE, got {init.shape}")
-    if init.size and (init.min() < 0 or init.max() >= num_pes):
-        raise ValueError("init placement references PEs outside the grid")
-
-    w_edge = np.asarray(model.w_edge)
-    nbr, w_inc, is_out = incidence_table(g, w_edge)
-    # Scoped x64: cost totals are int64 sums of squared loads — they must not
-    # wrap on big graphs, and callers shouldn't need global jax_enable_x64.
-    with enable_x64():
-        best_pe, best_cost, init_cost = _anneal_jit(
-            jnp.asarray(init), jnp.asarray(nbr), jnp.asarray(w_inc),
-            jnp.asarray(is_out), jnp.asarray(np.asarray(model.w_node)),
-            jnp.asarray(_thresholds(acfg)), jax.random.key(acfg.seed),
-            nx=nx, ny=ny, rounds=acfg.rounds, steps=acfg.steps,
-            pressure_weight=acfg.pressure_weight)
-    best_pe = np.asarray(best_pe)
-    best_cost = np.asarray(best_cost)
-    b = int(best_cost.argmin())
-    return PlacementResult(
-        node_pe=best_pe[b].astype(np.int32),
-        cost=int(best_cost[b]),
-        init_cost=int(init_cost),
-        replica_costs=best_cost.astype(np.int64),
-    )
+    src, dst = edge_endpoints(g)
+    return anneal_tables(
+        g.num_nodes, nx, ny, src, dst, np.asarray(model.w_edge),
+        np.asarray(model.w_node), acfg, init=init)

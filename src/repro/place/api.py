@@ -51,6 +51,13 @@ def resolve(g: DataflowGraph, nx: int, ny: int, placement=None) -> np.ndarray:
         return anneal_placement(
             g, nx, ny, spec.anneal_config, metric=spec.metric,
             init=init).node_pe
+    if spec.strategy == "multilevel":
+        from .coarsen import multilevel_anneal
+
+        return multilevel_anneal(
+            g, nx, ny, spec.anneal_config, ratio=spec.coarsen_ratio,
+            refine=spec.refine if spec.refine is not None else "auto",
+            metric=spec.metric).node_pe
     strategy = "round_robin" if spec.strategy == "identity" else spec.strategy
     return partition.place_nodes(g, num_pes, strategy, seed=spec.seed)
 
@@ -77,8 +84,88 @@ def graph_memory_for_config(g: DataflowGraph, nx: int, ny: int, cfg):
     return graph_memory(g, nx, ny, cfg.placement, criticality_order=wants)
 
 
+def uniform_graph_memories(g: DataflowGraph, nx: int, ny: int, node_pes,
+                           *, criticality_order: bool = True,
+                           metric: str = "height",
+                           pad_lmax: bool = True) -> list:
+    """Pack one GraphMemory per ``[N]`` node -> PE vector, all with identical
+    array shapes.
+
+    Slot depth (``lmax``) and per-PE edge capacity (``emax``) depend on the
+    placement, so naively packed candidate memories differ in shape and every
+    ``jax.jit``-ed engine call retraces — scoring k candidates used to
+    compile k times. Padding every memory to the candidate-set maxima makes
+    the shapes (and thus the jit cache key) identical, so the whole set runs
+    through ONE compiled program.
+
+    ``pad_lmax=False`` keeps each memory's own slot depth (only ``emax`` is
+    unified) — needed when a scheduler *models* latency from the memory depth
+    (the ``scan`` policy's word-count sweep), where padding would change
+    cycle counts.
+
+    ``metric`` is one criticality metric for the whole set or one per
+    placement (slot ordering only — it never moves the unified shapes).
+    """
+    from ..core.partition import build_graph_memory, packed_shape
+
+    node_pes = [np.asarray(p, dtype=np.int32) for p in node_pes]
+    metrics = ([metric] * len(node_pes) if isinstance(metric, str)
+               else list(metric))
+    if len(metrics) != len(node_pes):
+        raise ValueError(
+            f"need one metric or one per placement; got {len(metrics)} "
+            f"for {len(node_pes)} placements")
+    # Shapes come from the packer's own derivation (partition.packed_shape),
+    # so the identical-shapes guarantee cannot drift from the packing rule.
+    shapes = [packed_shape(g, pe, nx * ny) for pe in node_pes]
+    lmax = max((l for l, _ in shapes), default=1)
+    emax = max((e for _, e in shapes), default=1)
+    return [build_graph_memory(
+        g, nx, ny, placement=pe, metric=m,
+        criticality_order=criticality_order,
+        min_lmax=lmax if pad_lmax else 0, min_emax=emax)
+        for pe, m in zip(node_pes, metrics)]
+
+
+def _latency_depends_on_words(cfg_list) -> bool:
+    """True when any config's exposed select latency is a function of the
+    RDY word count (e.g. the ``scan`` policy) — lmax padding would then be a
+    *model* change, not just an engine one."""
+    from ..core import schedulers
+
+    return any(schedulers.get(c.scheduler).sel_lat(c, 1)
+               != schedulers.get(c.scheduler).sel_lat(c, 2)
+               for c in cfg_list)
+
+
+def simulate_placements(g: DataflowGraph, nx: int, ny: int, node_pes, cfg=None,
+                        *, mesh=None, criticality_order: bool = True,
+                        metric: str = "height") -> list:
+    """Simulated :class:`~repro.core.overlay.SimResult` per ``[N]`` vector.
+
+    The candidate memories are shape-unified (:func:`uniform_graph_memories`)
+    so the whole set executes through one compiled program — this is the bulk
+    evaluation path the surrogate training set is generated with.
+    """
+    from ..core import distributed, overlay
+
+    cfg = cfg or overlay.OverlayConfig()
+    gms = uniform_graph_memories(
+        g, nx, ny, node_pes, criticality_order=criticality_order,
+        metric=metric, pad_lmax=not _latency_depends_on_words([cfg]))
+    out = []
+    for gm in gms:
+        if mesh is None:
+            out.append(overlay.simulate_batch(gm, [cfg])[0])
+        else:
+            out.append(distributed.simulate_batch_sharded(gm, mesh, [cfg])[0])
+    return out
+
+
 def evaluate_placements(g: DataflowGraph, nx: int, ny: int, placements,
-                        cfgs=None, mesh=None) -> dict:
+                        cfgs=None, mesh=None, *, prune: str | None = None,
+                        keep_top: int = 8, surrogate=None,
+                        surrogate_train: int = 24) -> dict:
     """Score candidate placements by simulated cycle count.
 
     Args:
@@ -89,10 +176,24 @@ def evaluate_placements(g: DataflowGraph, nx: int, ny: int, placements,
         ``simulate_sharded`` / ``simulate_batch_sharded`` with the PE grid
         tiled over the mesh (placement evaluation for overlays larger than
         one device).
+      prune: ``"surrogate"`` ranks every candidate with the cheap
+        cycle-prediction model from :mod:`repro.surrogate` and simulates only
+        the ``keep_top`` best-predicted ones (the returned dict then contains
+        just those names). ``surrogate`` supplies a fitted
+        :class:`~repro.surrogate.model.SurrogateModel` (it must have been
+        built for this graph and grid — a mismatch raises); ``None`` fits one
+        on the spot from ``surrogate_train`` self-generated simulated
+        placements (``repro.surrogate.fit_from_sim``). With a config *sweep*,
+        the ranking (and any on-the-spot fit) follows ``cfg_list[0]`` only —
+        one pruned candidate set serves every config, so a placement that
+        excels only under a later config can be pruned away; prune per
+        config in separate calls when that matters.
 
     Returns:
       ``{name: SimResult}`` (or ``{name: [SimResult, ...]}`` with a config
-      sweep).
+      sweep). Candidate memories are shape-unified
+      (:func:`uniform_graph_memories`) so the batched engine compiles once
+      for the whole candidate set, not once per placement.
     """
     from ..core import distributed, overlay, schedulers
 
@@ -108,9 +209,38 @@ def evaluate_placements(g: DataflowGraph, nx: int, ny: int, placements,
             "wants_criticality_order per call; split the config sweep by "
             "memory layout")
     wants = wants_set.pop()
+
+    names = list(placements)
+    node_pes = [resolve(g, nx, ny, placements[k]) for k in names]
+    # Slot ordering honors each spec's own criticality metric (explicit
+    # arrays have no spec and take the default), exactly like graph_memory.
+    metrics = [coerce(placements[k]).metric
+               if not isinstance(placements[k], np.ndarray) else "height"
+               for k in names]
+
+    if prune is not None:
+        if prune != "surrogate":
+            raise ValueError(f"unknown prune mode {prune!r}; "
+                             f"known: 'surrogate'")
+        from .. import surrogate as sg
+
+        model = surrogate
+        if model is None:
+            # mesh rides along: an overlay that needs the sharded path for
+            # candidate sims needs it for the training sims too.
+            model, _, _ = sg.fit_from_sim(
+                g, nx, ny, cfg=cfg_list[0], n_train=surrogate_train,
+                mesh=mesh)
+        keep = model.rank(np.stack(node_pes))[:max(1, keep_top)]
+        names = [names[i] for i in keep]
+        node_pes = [node_pes[i] for i in keep]
+        metrics = [metrics[i] for i in keep]
+
+    gms = uniform_graph_memories(
+        g, nx, ny, node_pes, criticality_order=wants, metric=metrics,
+        pad_lmax=not _latency_depends_on_words(cfg_list))
     out = {}
-    for name, placement in placements.items():
-        gm = graph_memory(g, nx, ny, placement, criticality_order=wants)
+    for name, gm in zip(names, gms):
         if mesh is None:
             res = overlay.simulate_batch(gm, cfg_list)
         else:
@@ -146,8 +276,6 @@ def config_hillclimb(g: DataflowGraph, nx: int, ny: int, *,
     and reuses the result). Returns a machine-readable record:
     trajectory, best config, best cycles, evaluation count, wall seconds.
     """
-    import dataclasses
-
     from ..core import schedulers
     from ..core.overlay import OverlayConfig, simulate_batch
 

@@ -48,6 +48,24 @@ def integer_weights(crit: np.ndarray, crit_scale: int) -> np.ndarray:
     return (1 + (crit_scale * c) // top).astype(np.int32)
 
 
+def edge_tables(
+    g: DataflowGraph, *, metric: str = "height", crit_scale: int = 3,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Flat integer scoring tables ``(src, dst, w_edge, w_node)`` for ``g``.
+
+    ``w_node`` is the criticality ramp :func:`integer_weights`; each edge
+    carries its *source* node's weight (the token that travels is the source's
+    result). This is the shared table builder behind :func:`build_cost_model`,
+    the surrogate feature extractor (:mod:`repro.surrogate.features`) and the
+    multilevel coarsener (:mod:`repro.place.coarsen`) — one definition of
+    "edge weight" keeps their notions of criticality aligned.
+    """
+    crit = _criticality(g, metric)
+    src, dst = edge_endpoints(g)
+    w_node = integer_weights(crit, crit_scale)
+    return src, dst, w_node[src].astype(np.int32), w_node
+
+
 def torus_hops(src_pe, dst_pe, nx: int, ny: int):
     """Dimension-ordered hop count on the unidirectional nx x ny torus.
 
@@ -120,13 +138,12 @@ def build_cost_model(
     pressure_weight: int = 1,
 ) -> CostModel:
     """Precompute the scoring tables for ``g`` on an ``nx x ny`` grid."""
-    crit = _criticality(g, metric)
-    src, dst = edge_endpoints(g)
-    w_node = integer_weights(crit, crit_scale)
+    src, dst, w_edge, w_node = edge_tables(
+        g, metric=metric, crit_scale=crit_scale)
     return CostModel(
         nx=nx, ny=ny,
         src=jnp.asarray(src), dst=jnp.asarray(dst),
-        w_edge=jnp.asarray(w_node[src]),   # edge carries its source's weight
+        w_edge=jnp.asarray(w_edge),   # edge carries its source's weight
         w_node=jnp.asarray(w_node),
         pressure_weight=int(pressure_weight),
     )

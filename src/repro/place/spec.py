@@ -19,7 +19,7 @@ STATIC_STRATEGIES = (
     "identity", "round_robin", "blocked", "random", "clustered",
     "bulk_clustered", "critical_chain",
 )
-SEARCH_STRATEGIES = ("anneal",)
+SEARCH_STRATEGIES = ("anneal", "multilevel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,10 +58,13 @@ class PlacementSpec:
     ``strategy`` is ``"identity"`` (keep the partitioner's default
     round-robin — the layout every committed benchmark cycle count was
     recorded with), any static heuristic from
-    :func:`repro.core.partition.place_nodes`, or ``"anneal"`` (NoC-aware
+    :func:`repro.core.partition.place_nodes`, ``"anneal"`` (NoC-aware
     search: random init from ``seed``, improved by :func:`repro.place.anneal`
-    under ``anneal`` knobs). ``metric`` picks the criticality labeling used
-    for slot assignment and the cost model's weights.
+    under ``anneal`` knobs), or ``"multilevel"`` (coarsen ~``coarsen_ratio``x,
+    anneal cluster moves under ``anneal`` knobs, uncoarsen, then refine under
+    ``refine`` knobs — the fig1-full-scale pipeline in
+    :mod:`repro.place.coarsen`). ``metric`` picks the criticality labeling
+    used for slot assignment and the cost model's weights.
     """
 
     strategy: str = "identity"
@@ -71,6 +74,13 @@ class PlacementSpec:
     #: starting point for "anneal": "random" (the baseline the placer is
     #: guaranteed to never score worse than) or any static strategy.
     init: str = "random"
+    #: "multilevel" only: target nodes per cluster for the coarsening pass
+    #: (the graph collapses ~coarsen_ratio x before the coarse anneal).
+    coarsen_ratio: int = 32
+    #: "multilevel" only: budget of the bounded fine-grained refinement
+    #: anneal after uncoarsening (None = the small default derived from
+    #: ``anneal`` by :func:`repro.place.coarsen.default_refine`).
+    refine: AnnealConfig | None = None
 
     def __post_init__(self):
         known = STATIC_STRATEGIES + SEARCH_STRATEGIES
@@ -83,6 +93,11 @@ class PlacementSpec:
                 f"known: {STATIC_STRATEGIES}")
         if self.anneal is not None and not isinstance(self.anneal, AnnealConfig):
             raise TypeError(f"anneal must be an AnnealConfig, got {self.anneal!r}")
+        if self.refine is not None and not isinstance(self.refine, AnnealConfig):
+            raise TypeError(f"refine must be an AnnealConfig, got {self.refine!r}")
+        if self.coarsen_ratio < 1:
+            raise ValueError(
+                f"coarsen_ratio must be >= 1, got {self.coarsen_ratio}")
 
     @property
     def anneal_config(self) -> AnnealConfig:

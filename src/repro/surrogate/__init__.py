@@ -1,0 +1,82 @@
+"""repro.surrogate — batched cycle-count prediction for placement search.
+
+``repro.place`` (PR 3) scores every candidate placement by full cycle-accurate
+simulation — seconds to minutes per candidate at paper scale, which makes any
+wide search intractable (ROADMAP: "a cheap learned/regression bridge from
+integer cost to cycles"). This package is that bridge:
+
+  * :mod:`.features` — cheap, fully-vmapped integer features of a
+    ``(DataflowGraph, placement, grid)`` triple: hop-weighted traffic, slot
+    pressure, inject/eject port contention, torus ring loads, and a
+    criticality-depth histogram of per-wavefront load imbalance;
+  * :mod:`.model`    — deterministic closed-form ridge regression (scoped
+    x64, no RNG): bit-reproducible coefficients, microsecond predictions;
+  * :mod:`.data`     — self-generated training sets: counter-based-key
+    placement sampling + one-compile batched simulation.
+
+Top-level API (mirrors the subsystem contract):
+
+  * :func:`fit` — features + closed-form ridge over (placements, cycles);
+  * :func:`fit_from_sim` — sample, simulate, fit, in one call;
+  * :func:`predict_batch` / :func:`rank` — score / order a stacked candidate
+    batch with a fitted model.
+
+``repro.place.evaluate_placements(..., prune="surrogate", keep_top=k)`` uses
+:meth:`SurrogateModel.rank` to simulate only the k best-predicted candidates.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.graph import DataflowGraph
+from .data import make_training_set, sample_placements  # noqa: F401
+from .features import (  # noqa: F401
+    DEPTH_BUCKETS,
+    FeatureExtractor,
+    build_features,
+)
+from .model import (  # noqa: F401
+    SurrogateModel,
+    fit_features,
+    spearman,
+)
+
+
+def fit(g: DataflowGraph, nx: int, ny: int, placements, cycles, *,
+        metric: str = "height", crit_scale: int = 3,
+        ridge: float = 1e-3) -> SurrogateModel:
+    """Fit a cycle-count surrogate on simulated ``(placements, cycles)``.
+
+    ``placements`` is a stacked ``[n, N]`` int array (or a list of ``[N]``
+    vectors); ``cycles`` the matching simulated cycle counts.
+    """
+    extractor = build_features(g, nx, ny, metric=metric,
+                               crit_scale=crit_scale)
+    x = extractor.features_batch(np.stack([np.asarray(p) for p in placements]))
+    return fit_features(extractor, x, cycles, ridge=ridge)
+
+
+def fit_from_sim(g: DataflowGraph, nx: int, ny: int, *, cfg=None,
+                 n_train: int = 48, seed: int = 0, mesh=None,
+                 metric: str = "height", crit_scale: int = 3,
+                 ridge: float = 1e-3):
+    """Sample ``n_train`` placements, simulate them, fit.
+
+    Returns ``(model, placements, cycles)`` so callers can account for the
+    simulations spent on training (the pruning benchmark reports them).
+    """
+    placements, cycles = make_training_set(
+        g, nx, ny, cfg=cfg, n=n_train, seed=seed, mesh=mesh)
+    model = fit(g, nx, ny, placements, cycles, metric=metric,
+                crit_scale=crit_scale, ridge=ridge)
+    return model, placements, cycles
+
+
+def predict_batch(model: SurrogateModel, placements) -> np.ndarray:
+    """[B] float64 predicted cycle counts (module-level convenience)."""
+    return model.predict_batch(placements)
+
+
+def rank(model: SurrogateModel, placements) -> np.ndarray:
+    """[B] candidate indices, best predicted first (module-level convenience)."""
+    return model.rank(placements)

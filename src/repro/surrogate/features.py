@@ -1,0 +1,171 @@
+"""Cheap, fully-vmapped placement features for cycle-count prediction.
+
+A feature vector summarizes how a candidate ``[N]`` node -> PE placement
+stresses the overlay, using only static graph tables (no simulation):
+
+  * **traffic** — hop-weighted NoC load (weighted / unweighted / critical-
+    chain-only sums over the unidirectional-torus hop counts the simulator
+    charges);
+  * **slot pressure** — per-PE criticality-weighted load: sum of squares and
+    max (each PE fires at most one node per cycle, so piled load serializes),
+    plus the unweighted slot-count shape (max local memory depth);
+  * **port contention** — per-PE counts of remote packets that must leave
+    (inject, 1/PE/cycle) and land (eject, 1 port/PE/cycle): sum of squares
+    and max of each;
+  * **ring load** — traffic per X-ring / Y-ring of the Hoplite torus (a
+    packet moves east along its source row, then south along its destination
+    column): max and sum-of-squares of each — hot rings deflect;
+  * **criticality-depth histogram** — per ASAP-depth-bucket per-PE weighted
+    load, reduced to max and sum-of-squares per bucket: the dataflow wavefront
+    sweeps depth levels in order, so imbalance *within* a level serializes
+    that level no matter how balanced the total is.
+
+Every term is an integer accumulation (scoped x64 — no global flag), so the
+feature matrix is bit-reproducible across machines, and the whole batch
+extracts as one ``jax.vmap`` on-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core.criticality import asap_levels
+from ..core.graph import DataflowGraph
+from ..place.cost import edge_tables
+
+#: ASAP-depth buckets in the criticality-depth histogram block.
+DEPTH_BUCKETS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureExtractor:
+    """Static per-graph tables + the vmapped feature function."""
+
+    nx: int
+    ny: int
+    src: np.ndarray          # [E] int32 edge source node
+    dst: np.ndarray          # [E] int32 edge destination node
+    w_edge: np.ndarray       # [E] int32 criticality edge weight
+    w_node: np.ndarray       # [N] int32 criticality node weight
+    crit_edge: np.ndarray    # [E] bool: edge on the (near-)critical chain
+    depth_bucket: np.ndarray  # [N] int32 ASAP-depth bucket in [0, DEPTH_BUCKETS)
+
+    @property
+    def num_pes(self) -> int:
+        return self.nx * self.ny
+
+    @property
+    def num_features(self) -> int:
+        return 13 + 2 * DEPTH_BUCKETS
+
+    @functools.cached_property
+    def _batch_fn(self):
+        nx, ny, P = self.nx, self.ny, self.num_pes
+        src = jnp.asarray(self.src)
+        dst = jnp.asarray(self.dst)
+        crit_edge = jnp.asarray(self.crit_edge)
+        db = jnp.asarray(self.depth_bucket)
+
+        def one(pe, w_edge, w_node):
+            pe = jnp.asarray(pe, jnp.int32)
+            ps, pd = pe[src], pe[dst]
+            sx, sy = ps // ny, ps % ny
+            dx, dy = pd // ny, pd % ny
+            hx = jnp.mod(dx - sx, nx).astype(jnp.int64)
+            hy = jnp.mod(dy - sy, ny).astype(jnp.int64)
+            hops = hx + hy
+            remote = (hops > 0).astype(jnp.int64)
+
+            t_w = jnp.sum(w_edge * hops)
+            t_u = jnp.sum(hops)
+            t_c = jnp.sum(jnp.where(crit_edge, hops, 0))
+
+            loads = jnp.zeros(P, jnp.int64).at[pe].add(w_node)
+            counts = jnp.zeros(P, jnp.int64).at[pe].add(1)
+            inject = jnp.zeros(P, jnp.int64).at[ps].add(remote)
+            eject = jnp.zeros(P, jnp.int64).at[pd].add(remote)
+
+            # Ring loads: east hops run on the source row (X-ring sy), south
+            # hops on the destination column (Y-ring dx) — dimension order.
+            ring_x = jnp.zeros(ny, jnp.int64).at[sy].add(w_edge * hx)
+            ring_y = jnp.zeros(nx, jnp.int64).at[dx].add(w_edge * hy)
+
+            # [DEPTH_BUCKETS, P] weighted load per (wavefront level, PE).
+            lvl = jnp.zeros((DEPTH_BUCKETS, P), jnp.int64).at[db, pe].add(w_node)
+
+            return jnp.concatenate([
+                jnp.stack([
+                    t_w, t_u, t_c,
+                    jnp.sum(loads * loads), loads.max(),
+                    jnp.sum(counts * counts), counts.max(),
+                    jnp.sum(inject * inject), inject.max(),
+                    jnp.sum(eject * eject), eject.max(),
+                    jnp.maximum(ring_x.max(), ring_y.max()),
+                    jnp.sum(ring_x * ring_x) + jnp.sum(ring_y * ring_y),
+                ]),
+                lvl.max(axis=1),
+                jnp.sum(lvl * lvl, axis=1),
+            ])
+
+        @jax.jit
+        def batch(pes):
+            w_edge = jnp.asarray(self.w_edge, jnp.int64)
+            w_node = jnp.asarray(self.w_node, jnp.int64)
+            return jax.vmap(lambda p: one(p, w_edge, w_node))(pes)
+
+        return batch
+
+    def features_batch(self, placements) -> np.ndarray:
+        """[B, F] float64 feature matrix of a stacked [B, N] candidate batch.
+
+        All accumulations are int64 under scoped x64 and the features are
+        exact integers, so the matrix is bit-identical across machines.
+        """
+        placements = np.asarray(placements, dtype=np.int32)
+        if placements.ndim == 1:
+            placements = placements[None]
+        n = self.w_node.shape[0]
+        if placements.shape[-1] != n:
+            # Without this, jit's clamping gather would silently score a
+            # placement of the WRONG graph instead of erroring.
+            raise ValueError(
+                f"placements are [B, {placements.shape[-1]}] but this "
+                f"extractor was built for a {n}-node graph on a "
+                f"{self.nx}x{self.ny} grid")
+        if placements.size and (placements.min() < 0
+                                or placements.max() >= self.num_pes):
+            raise ValueError(
+                f"placement references PEs outside the {self.nx}x{self.ny} "
+                f"grid")
+        with enable_x64():
+            out = self._batch_fn(jnp.asarray(placements))
+            return np.asarray(out).astype(np.float64)
+
+
+def build_features(
+    g: DataflowGraph,
+    nx: int,
+    ny: int,
+    *,
+    metric: str = "height",
+    crit_scale: int = 3,
+) -> FeatureExtractor:
+    """Precompute the static feature tables for ``g`` on an ``nx x ny`` grid."""
+    src, dst, w_edge, w_node = edge_tables(g, metric=metric,
+                                           crit_scale=crit_scale)
+    depth = asap_levels(g)
+    top = max(1, int(depth.max(initial=0)) + 1)
+    bucket = (depth * DEPTH_BUCKETS // top).astype(np.int32)
+    return FeatureExtractor(
+        nx=nx, ny=ny,
+        src=src.astype(np.int32), dst=dst.astype(np.int32),
+        w_edge=w_edge.astype(np.int32), w_node=w_node.astype(np.int32),
+        # "critical chain": edges carrying the top integer weight class.
+        crit_edge=w_edge >= int(w_edge.max(initial=1)),
+        depth_bucket=bucket,
+    )

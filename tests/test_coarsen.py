@@ -1,0 +1,143 @@
+"""Multilevel placement (repro.place.coarsen): clustering determinism and
+size caps, quotient-table weight conservation, identity-coarsened anneal ==
+the PR-3 annealer bit-exactly, uncoarsened placements are valid node -> PE
+maps, and the workloads graph cache round-trips."""
+import os
+
+import numpy as np
+import pytest
+
+from repro import place
+from repro.core import workloads as wl
+from repro.core.overlay import OverlayConfig
+from repro.place.cost import edge_tables
+
+G = wl.arrow_lu_graph(3, 6, 4, seed=5)
+
+ACFG = place.AnnealConfig(replicas=6, rounds=10, steps=192, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Clustering.
+# ---------------------------------------------------------------------------
+
+def test_cluster_nodes_deterministic_capped_compact():
+    c1 = place.cluster_nodes(G, 16)
+    c2 = place.cluster_nodes(G, 16)
+    np.testing.assert_array_equal(c1, c2)
+    sizes = np.bincount(c1)
+    assert sizes.max() <= 16 and sizes.min() >= 1
+    # Dense ids 0..C-1, first-appearance order.
+    assert c1.min() == 0 and set(np.unique(c1)) == set(range(c1.max() + 1))
+    first_seen = [c1[np.argmax(c1 == k)] for k in range(c1.max() + 1)]
+    assert first_seen == sorted(first_seen)
+    # A real reduction: at least 4x fewer clusters than nodes at ratio 16.
+    assert (c1.max() + 1) * 4 <= G.num_nodes
+
+
+def test_cluster_ratio_one_is_identity():
+    np.testing.assert_array_equal(place.cluster_nodes(G, 1),
+                                  np.arange(G.num_nodes))
+    with pytest.raises(ValueError, match="ratio"):
+        place.cluster_nodes(G, 0)
+
+
+def test_quotient_tables_conserve_weight():
+    clusters = place.cluster_nodes(G, 8)
+    csrc, cdst, cw_edge, cw_node = place.quotient_tables(G, clusters)
+    src, dst, w_edge, w_node = edge_tables(G)
+    assert int(cw_node.sum()) == int(w_node.sum())
+    cross = clusters[src] != clusters[dst]
+    assert int(cw_edge.sum()) == int(w_edge[cross].sum())
+    assert (csrc != cdst).all()
+    c = int(clusters.max()) + 1
+    assert csrc.max(initial=0) < c and cdst.max(initial=0) < c
+
+
+# ---------------------------------------------------------------------------
+# Multilevel pipeline.
+# ---------------------------------------------------------------------------
+
+def test_identity_coarsen_matches_plain_annealer_bit_exactly():
+    plain = place.anneal_placement(G, 4, 4, ACFG)
+    ml = place.multilevel_anneal(G, 4, 4, ACFG,
+                                 clusters=np.arange(G.num_nodes), refine=None)
+    np.testing.assert_array_equal(ml.node_pe, plain.node_pe)
+    assert ml.coarse.cost == plain.cost
+    assert ml.num_clusters == G.num_nodes
+
+
+def test_uncoarsened_placement_is_valid_and_cluster_consistent():
+    ml = place.multilevel_anneal(G, 4, 4, ACFG, ratio=16, refine=None)
+    assert ml.node_pe.shape == (G.num_nodes,)
+    assert ml.node_pe.dtype == np.int32
+    assert ml.node_pe.min() >= 0 and ml.node_pe.max() < 16
+    # Without refinement every node sits on its cluster's PE.
+    np.testing.assert_array_equal(ml.node_pe,
+                                  ml.coarse.node_pe[ml.clusters])
+    # And the packed memory accepts it (valid node -> PE map end to end).
+    gm = place.graph_memory(G, 4, 4, ml.node_pe)
+    assert gm.num_nodes == G.num_nodes
+
+
+def test_multilevel_deterministic_and_refine_never_worse():
+    a = place.multilevel_anneal(G, 4, 4, ACFG, ratio=16, refine=ACFG)
+    b = place.multilevel_anneal(G, 4, 4, ACFG, ratio=16, refine=ACFG)
+    np.testing.assert_array_equal(a.node_pe, b.node_pe)
+    assert a.cost == b.cost
+    # Refinement warm-starts from the projection and tracks best-so-far.
+    assert a.cost <= a.projected_cost
+    assert a.refined is not None and a.refined.init_cost == a.projected_cost
+
+
+def test_multilevel_spec_threads_through_resolve():
+    spec = place.PlacementSpec(strategy="multilevel", anneal=ACFG,
+                               coarsen_ratio=16, refine=ACFG)
+    via_spec = place.resolve(G, 4, 4, spec)
+    direct = place.multilevel_anneal(G, 4, 4, ACFG, ratio=16, refine=ACFG)
+    np.testing.assert_array_equal(via_spec, direct.node_pe)
+    with pytest.raises(ValueError, match="coarsen_ratio"):
+        place.PlacementSpec(strategy="multilevel", coarsen_ratio=0)
+
+
+def test_multilevel_beats_round_robin_on_cycles():
+    g = wl.arrow_lu_graph(2, 8, 6, seed=3)
+    ml = place.multilevel_anneal(
+        g, 8, 8, place.AnnealConfig(replicas=8, rounds=16, steps=384, seed=0),
+        ratio=8,
+        refine=place.AnnealConfig(replicas=6, rounds=12, steps=512, seed=0))
+    res = place.evaluate_placements(g, 8, 8, {
+        "round_robin": "round_robin", "multilevel": ml.node_pe,
+    }, cfgs=OverlayConfig(max_cycles=500_000))
+    assert res["round_robin"].done and res["multilevel"].done
+    assert res["multilevel"].cycles < res["round_robin"].cycles
+
+
+# ---------------------------------------------------------------------------
+# Workloads graph cache (fig1_full satellite).
+# ---------------------------------------------------------------------------
+
+def test_cached_graph_roundtrip(tmp_path):
+    calls = []
+
+    def build():
+        calls.append(1)
+        return G
+
+    a = wl.cached_graph("t", build, cache_dir=str(tmp_path))
+    b = wl.cached_graph("t", build, cache_dir=str(tmp_path))
+    assert calls == [1]                     # second call served from disk
+    assert os.path.exists(tmp_path / "t.npz")
+    for f in ("opcode", "fanout_ptr", "fanout_dst", "fanout_slot",
+              "initial_values"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    b.validate()
+
+
+def test_fig1_full_calibration_small(tmp_path):
+    # Same constructor, tiny budget: must land near the target and cache.
+    g1 = wl.fig1_full(target_nodes=1_000, seed=0, cache_dir=str(tmp_path))
+    g2 = wl.fig1_full(target_nodes=1_000, seed=0, cache_dir=str(tmp_path))
+    np.testing.assert_array_equal(g1.opcode, g2.opcode)
+    assert 500 <= g1.num_nodes <= 20_000    # lu_size_for_nodes is heuristic
+    assert len(list(tmp_path.iterdir())) == 1

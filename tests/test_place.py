@@ -151,6 +151,17 @@ def test_annealed_never_increases_cycles_vs_random(blocks, bs, border, grid):
     assert res["annealed"].cycles <= res["random"].cycles
 
 
+def test_evaluate_placements_honors_spec_metric():
+    # Slot ordering must follow each spec's own criticality metric (the
+    # uniform-shape packing path must not silently fall back to "height").
+    spec = place.PlacementSpec(strategy="clustered", metric="neg_slack")
+    cfg = OverlayConfig(max_cycles=500_000)
+    res = place.evaluate_placements(G, 4, 4, {"s": spec}, cfgs=cfg)["s"]
+    ref = simulate(place.graph_memory(G, 4, 4, spec), cfg)
+    assert _stats(res) == _stats(ref)
+    np.testing.assert_array_equal(res.values, ref.values)
+
+
 def test_evaluate_placements_sharded_matches_single_device():
     import jax
     from jax.sharding import Mesh

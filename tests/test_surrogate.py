@@ -1,0 +1,164 @@
+"""Surrogate subsystem (repro.surrogate): bit-reproducible fits, feature
+batch/solo consistency, rank quality on the fig1 family, the pruning bridge
+into place.evaluate_placements, and the recompile-churn fix (one compiled
+program per candidate set)."""
+import numpy as np
+import pytest
+
+from repro import place, surrogate
+from repro.core import workloads as wl
+from repro.core.overlay import OverlayConfig
+
+#: small fig1-family graph: fast, but structured like the paper's workloads
+G = wl.arrow_lu_graph(2, 6, 4, seed=5)
+NX = NY = 4
+CFG = OverlayConfig(max_cycles=200_000)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """One shared (model, placements, cycles) fit for the module."""
+    return surrogate.fit_from_sim(G, NX, NY, cfg=CFG, n_train=24, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: fixed key -> bit-identical training set and coefficients.
+# ---------------------------------------------------------------------------
+
+def test_sampling_deterministic_and_decorrelated():
+    a = surrogate.sample_placements(G, NX, NY, 12, seed=0)
+    b = surrogate.sample_placements(G, NX, NY, 12, seed=0)
+    np.testing.assert_array_equal(a, b)
+    c = surrogate.sample_placements(G, NX, NY, 12, seed=1)
+    # Static-heuristic rows are seed-independent; the sampled tail must move.
+    assert (a[5:] != c[5:]).any()
+    assert a.dtype == np.int32 and a.min() >= 0 and a.max() < NX * NY
+
+
+def test_fit_bit_identical_coefficients(trained):
+    model, placements, cycles = trained
+    refit = surrogate.fit(G, NX, NY, placements, cycles)
+    np.testing.assert_array_equal(model.beta, refit.beta)
+    np.testing.assert_array_equal(model.mu, refit.mu)
+    np.testing.assert_array_equal(model.sigma, refit.sigma)
+    assert model.y_mean == refit.y_mean
+
+
+def test_features_batch_matches_solo():
+    ext = surrogate.build_features(G, NX, NY)
+    cands = surrogate.sample_placements(G, NX, NY, 6, seed=2)
+    batch = ext.features_batch(cands)
+    solo = np.stack([ext.features_batch(c[None])[0] for c in cands])
+    np.testing.assert_array_equal(batch, solo)
+    assert batch.shape == (6, ext.num_features)
+    # Integer accumulations: the float64 features are exact integers.
+    np.testing.assert_array_equal(batch, np.rint(batch))
+
+
+def test_features_see_locality_and_balance():
+    ext = surrogate.build_features(G, NX, NY)
+    all_one = np.zeros(G.num_nodes, np.int32)
+    spread = place.resolve(G, NX, NY, "round_robin")
+    f_one = ext.features_batch(all_one[None])[0]
+    f_spread = ext.features_batch(spread[None])[0]
+    assert f_one[0] == 0                      # zero traffic when co-located
+    assert f_spread[0] > 0
+    assert f_one[3] > f_spread[3]             # piled load -> higher pressure
+
+
+# ---------------------------------------------------------------------------
+# Rank quality + the pruning bridge.
+# ---------------------------------------------------------------------------
+
+def test_rank_quality_held_out(trained):
+    model, _, _ = trained
+    held = surrogate.sample_placements(G, NX, NY, 24, seed=11)
+    cycles = np.asarray(
+        [r.cycles for r in place.simulate_placements(G, NX, NY, list(held),
+                                                     CFG)])
+    rho = surrogate.spearman(model.predict_batch(held), cycles)
+    assert rho >= 0.7, f"held-out spearman {rho:.3f}"
+    order = model.rank(held)
+    assert sorted(order.tolist()) == list(range(24))
+
+
+def test_prune_surrogate_simulates_only_top_k(trained):
+    model, _, _ = trained
+    cands = surrogate.sample_placements(G, NX, NY, 12, seed=3)
+    names = {f"c{i}": p for i, p in enumerate(cands)}
+    full = place.evaluate_placements(G, NX, NY, names, cfgs=CFG)
+    pruned = place.evaluate_placements(G, NX, NY, names, cfgs=CFG,
+                                       prune="surrogate", keep_top=3,
+                                       surrogate=model)
+    assert len(pruned) == 3 and set(pruned) <= set(full)
+    for name, r in pruned.items():
+        assert r.done
+        assert r.cycles == full[name].cycles  # pruning never changes scoring
+    with pytest.raises(ValueError, match="unknown prune mode"):
+        place.evaluate_placements(G, NX, NY, names, cfgs=CFG, prune="oracle")
+
+
+def test_wrong_graph_or_grid_rejected(trained):
+    model, _, _ = trained
+    other = wl.arrow_lu_graph(2, 8, 6, seed=3)      # different node count
+    with pytest.raises(ValueError, match="extractor was built for"):
+        model.predict_batch(np.zeros((2, other.num_nodes), np.int32))
+    with pytest.raises(ValueError, match="outside the"):
+        model.predict_batch(np.full(G.num_nodes, NX * NY, np.int32))
+
+
+def test_spearman_helper():
+    assert surrogate.spearman([1, 2, 3], [10, 20, 30]) == 1.0
+    assert surrogate.spearman([1, 2, 3], [30, 20, 10]) == -1.0
+    assert abs(surrogate.spearman([1, 1, 2], [1, 1, 2]) - 1.0) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Recompile churn: one candidate set -> one compiled batch program.
+# ---------------------------------------------------------------------------
+
+def test_uniform_memories_share_shapes_and_one_compile():
+    from repro.core.overlay import _run_batch_jit
+
+    cands = surrogate.sample_placements(G, NX, NY, 5, seed=4)
+    gms = place.uniform_graph_memories(G, NX, NY, list(cands))
+    shapes = {(gm.lmax, gm.emax, gm.words) for gm in gms}
+    assert len(shapes) == 1
+    before = _run_batch_jit._cache_size()
+    res = place.simulate_placements(G, NX, NY, list(cands), CFG)
+    assert all(r.done for r in res)
+    assert _run_batch_jit._cache_size() - before <= 1
+
+
+def test_uniform_padding_is_result_invariant():
+    # Padded memories must simulate bit-identically to naturally-sized ones.
+    from repro.core.overlay import simulate
+
+    pe = place.resolve(G, NX, NY, "clustered")
+    gm_nat = place.graph_memory(G, NX, NY, pe)
+    gm_pad = place.uniform_graph_memories(
+        G, NX, NY, [pe, np.zeros(G.num_nodes, np.int32)])[0]
+    assert gm_pad.lmax >= gm_nat.lmax and gm_pad.emax >= gm_nat.emax
+    a = simulate(gm_nat, CFG)
+    b = simulate(gm_pad, CFG)
+    assert (a.cycles, a.done, a.delivered) == (b.cycles, b.done, b.delivered)
+    np.testing.assert_array_equal(a.values, b.values)
+
+
+def test_scan_policy_skips_lmax_padding():
+    # The scan policy models select latency from the RDY word count, so
+    # padding the slot depth would change cycle counts — evaluate_placements
+    # must fall back to per-placement depths for it.
+    from repro.core.overlay import simulate
+
+    cfg = OverlayConfig(scheduler="scan", max_cycles=500_000)
+    pe = place.resolve(G, NX, NY, "clustered")
+    res = place.evaluate_placements(
+        G, NX, NY, {"clustered": pe, "one_pe": np.zeros(G.num_nodes, np.int32)},
+        cfgs=cfg)
+    ref = simulate(G, cfg, nx=NX, ny=NY)  # identity via the engine path
+    solo = simulate(place.graph_memory(
+        G, NX, NY, pe,
+        criticality_order=False), cfg)
+    assert res["clustered"].cycles == solo.cycles
+    assert ref.done and res["one_pe"].done
