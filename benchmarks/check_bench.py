@@ -15,6 +15,11 @@ solve is float64 — integer features make it stable to reproduce, but the last
 bits (and thus near-tie ranks) may differ across BLAS builds, unlike the
 integer cycle counts which must match bit-exactly.
 
+The ``guided`` section carries two more blocking relations, both on exact
+deterministic integers (the guided annealer's accept rule is fully
+quantized): full-cost evaluations <= GUIDED_EVAL_RATIO_MAX of the unguided
+budget, and guided simulated cycles <= unguided simulated cycles.
+
 Usage:  python benchmarks/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
@@ -27,17 +32,22 @@ SPEARMAN_FLOOR = 0.8
 #: max pruned_best / exhaustive_best: the top-k predicted candidates must
 #: contain a placement within 5% of the exhaustive-simulation best.
 PRUNE_GAP_MAX = 1.05
+#: max full-cost evaluations of the guided annealer over the unguided
+#: budget: the surrogate gate must screen out at least half the proposals
+#: an unguided run would have cost-evaluated (exact integer counters).
+GUIDED_EVAL_RATIO_MAX = 0.5
 
 
 def _cycle_counts(bench: dict) -> dict[str, int]:
     """Flatten every tracked cycle count to {metric_name: cycles}."""
     out: dict[str, int] = {}
     flat_rows = list(bench.get("fig1", []))
-    # Placement / eject / surrogate sections carry per-row cycles_* keys like
-    # fig1 does (identity/random/annealed placements; n_first/priority
-    # arbitration; multilevel coarsen->anneal->refine vs round-robin) — all
-    # deterministic simulation semantics, all blocking.
-    for section in ("placement", "eject", "surrogate"):
+    # Placement / eject / surrogate / guided / fig1_full sections carry
+    # per-row cycles_* keys like fig1 does (identity/random/annealed
+    # placements; n_first/priority arbitration; multilevel and guided
+    # searches; the fig1-full tracked row) — all deterministic simulation
+    # semantics, all blocking.
+    for section in ("placement", "eject", "surrogate", "guided", "fig1_full"):
         flat_rows += bench.get(section, {}).get("rows", [])
     for row in flat_rows:
         for key, val in row.items():
@@ -81,10 +91,40 @@ def _surrogate_quality(baseline: dict, fresh: dict) -> list[str]:
     return bad
 
 
+def _guided_quality(fresh: dict) -> list[str]:
+    """Blocking guided-annealing floor violations in the fresh run.
+
+    Two relations per ``guided`` row, both exact deterministic integers:
+    the surrogate gate must keep full-cost evaluations at or under
+    ``GUIDED_EVAL_RATIO_MAX`` of the unguided budget, and the guided search
+    must reach equal-or-better simulated cycles than the unguided annealer
+    of the same run. (Vanished guided rows are caught by the cycle diff —
+    they carry ``cycles_*`` keys.)
+    """
+    bad = []
+    for row in fresh.get("guided", {}).get("rows", []):
+        if {"cost_evals", "cost_evals_unguided"} <= row.keys():
+            # Exact integer comparison — the reported eval_ratio is rounded
+            # for display and could hide a hairline violation.
+            if row["cost_evals"] > GUIDED_EVAL_RATIO_MAX \
+                    * row["cost_evals_unguided"]:
+                bad.append(f"{row['name']}: cost_evals {row['cost_evals']} "
+                           f"> {GUIDED_EVAL_RATIO_MAX} * unguided budget "
+                           f"{row['cost_evals_unguided']}")
+        elif "eval_ratio" in row and row["eval_ratio"] > GUIDED_EVAL_RATIO_MAX:
+            bad.append(f"{row['name']}: eval_ratio {row['eval_ratio']} "
+                       f"> max {GUIDED_EVAL_RATIO_MAX}")
+        if {"cycles_guided", "cycles_unguided"} <= row.keys() \
+                and row["cycles_guided"] > row["cycles_unguided"]:
+            bad.append(f"{row['name']}: guided {row['cycles_guided']} "
+                       f"cycles > unguided {row['cycles_unguided']}")
+    return bad
+
+
 def _wall_times(bench: dict) -> dict[str, float]:
     out: dict[str, float] = {}
     rows = list(bench.get("fig1", []))
-    for section in ("placement", "eject", "surrogate"):
+    for section in ("placement", "eject", "surrogate", "guided", "fig1_full"):
         rows += bench.get(section, {}).get("rows", [])
     for row in rows:
         out[f"{row['name']}.wall_s"] = float(row["wall_s"])
@@ -126,7 +166,8 @@ def main(baseline_path: str, fresh_path: str) -> int:
         print(f"WALL    {name} = {new}{delta}")
 
     quality = _surrogate_quality(baseline, fresh)
-    failures = regressions + quality
+    guided = _guided_quality(fresh)
+    failures = regressions + quality + guided
     if failures:
         if regressions:
             print(f"\nFAIL: {len(regressions)} cycle-count regression(s):")
@@ -136,6 +177,11 @@ def main(baseline_path: str, fresh_path: str) -> int:
             print(f"\nFAIL: {len(quality)} surrogate quality-floor "
                   f"violation(s):")
             for line in quality:
+                print(f"  {line}")
+        if guided:
+            print(f"\nFAIL: {len(guided)} guided-annealing floor "
+                  f"violation(s):")
+            for line in guided:
                 print(f"  {line}")
         return 1
     print(f"\nOK: {len(base_cyc)} tracked cycle counts, no regressions.")

@@ -73,7 +73,13 @@ def run(full: bool = False, nx: int = 16, ny: int = 16,
         policies: tuple[str, ...] = DEFAULT_POLICIES):
     rows = []
     for blocks, s, w in (SWEEP_FULL if full else SWEEP):
-        g = wl.arrow_lu_graph(blocks, s, w, seed=3)
+        # Cached on disk (experiments/graph_cache/): the --full sweep's big
+        # DAGs take minutes of Python elimination to build, and CI persists
+        # the cache across runs keyed on the workload code.
+        g = wl.cached_graph(
+            f"arrow_b{blocks}_s{s}_w{w}_seed3",
+            lambda blocks=blocks, s=s, w=w: wl.arrow_lu_graph(
+                blocks, s, w, seed=3))
         cyc, wall, hot_wall = _run_policies(g, nx, ny, policies, timed=True)
         total_cycles = sum(cyc.values())
         row = {

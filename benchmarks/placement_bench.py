@@ -29,12 +29,27 @@ N-first default — cycle counts and total deflections for both.
     round-robin default — both cycle counts CI-gated bit-exactly (the whole
     pipeline is integer/deterministic).
 
+``guided`` (the PR-5 tentpole): per fig1 workload, the two-stage
+surrogate-guided annealer versus the plain PR-4 annealer. The guided search
+runs ``GUIDED_ROUNDS_SCALE``x the proposal budget but its surrogate gate
+(margin ``GUIDED_MARGIN``) rejects most proposals before the integer cost
+rule, so its *full-cost evaluation* count stays under
+``check_bench.GUIDED_EVAL_RATIO_MAX`` (0.5) of the unguided budget while
+reaching equal-or-better simulated cycles — both the cycle counts and the
+exact deterministic evaluation counters are CI-gated.
+
+``fig1_full`` (``--full`` runs only): the ~470K-node paper-scale LU DAG,
+multilevel-placed under a fixed budget and simulated against the round-robin
+default — the ROADMAP's "fig1-full tracked BENCH row", cycle counts gated
+bit-exactly.
+
 Everything here is integer/deterministic (fixed PRNG keys, integer cost
 annealer), so all ``cycles_*`` values are CI-gated by
 ``benchmarks/check_bench.py`` exactly like the fig1 rows.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -60,13 +75,28 @@ EJECT_WORKLOADS = [
 ]
 
 
+#: memos of (workload, grid, config) -> unguided PlacementResult / its
+#: simulated SimResult: the ``placement`` and ``guided`` sections report the
+#: same deterministic search, so both the anneal and its (identically
+#: padded, result-invariant) cycle simulation run once.
+_ANNEAL_CACHE: dict = {}
+_ANNEAL_SIM_CACHE: dict = {}
+
+
+def _annealed(name, g, nx, ny, acfg):
+    key = (name, nx, ny, acfg)
+    if key not in _ANNEAL_CACHE:
+        _ANNEAL_CACHE[key] = place.anneal_placement(g, nx, ny, acfg)
+    return _ANNEAL_CACHE[key]
+
+
 def run_placement():
     rows = []
     for name, (blocks, bs, border), (nx, ny), acfg in PLACEMENT_WORKLOADS:
         g = wl.arrow_lu_graph(blocks, bs, border, seed=3)
         cfg = OverlayConfig(scheduler="ooo", max_cycles=4_000_000)
         t0 = time.time()
-        ann = place.anneal_placement(g, nx, ny, acfg)
+        ann = _annealed(name, g, nx, ny, acfg)
         ann_id = place.anneal_placement(
             g, nx, ny, acfg, init=place.resolve(g, nx, ny, "round_robin"))
         res = place.evaluate_placements(g, nx, ny, {
@@ -77,6 +107,7 @@ def run_placement():
         }, cfgs=cfg)
         wall = time.time() - t0
         assert all(r.done for r in res.values()), name
+        _ANNEAL_SIM_CACHE[(name, nx, ny, acfg)] = res["annealed"]
         rows.append({
             "name": f"placement_{name}",
             "us_per_call": round(1e6 * wall, 1),
@@ -117,14 +148,27 @@ MULTILEVEL_REFINE = place.AnnealConfig(replicas=4, rounds=8, steps=2048,
 MULTILEVEL_RATIO = 32
 
 
+#: memo of (workload name, grid) -> fit_from_sim triple: the ``guided`` rows
+#: consult the very same fitted models the ``surrogate`` rank rows report
+#: on, so the N_TRAIN training simulations are spent once per workload.
+_MODEL_CACHE: dict = {}
+
+
+def _fitted_model(name, g, nx, ny, cfg):
+    key = (name, nx, ny)
+    if key not in _MODEL_CACHE:
+        _MODEL_CACHE[key] = surrogate.fit_from_sim(
+            g, nx, ny, cfg=cfg, n_train=N_TRAIN, seed=0)
+    return _MODEL_CACHE[key]
+
+
 def run_surrogate():
     rows = []
     cfg = OverlayConfig(scheduler="ooo", max_cycles=4_000_000)
     for name, args, (nx, ny) in SURROGATE_WORKLOADS:
         g = wl.arrow_lu_graph(*args, seed=3)
         t0 = time.time()
-        model, _, train_cycles = surrogate.fit_from_sim(
-            g, nx, ny, cfg=cfg, n_train=N_TRAIN, seed=0)
+        model, _, train_cycles = _fitted_model(name, g, nx, ny, cfg)
         held = surrogate.sample_placements(g, nx, ny, N_HELD, seed=101,
                                            include_static=False)
         held_res = place.simulate_placements(g, nx, ny, list(held), cfg)
@@ -200,6 +244,125 @@ def run_multilevel():
         "grid": [nx, ny],
         "clusters": ml.num_clusters,
         "coarsen_ratio": MULTILEVEL_RATIO,
+        "proposal_budget": proposals,
+        "wall_s": round(wall, 3),
+        "anneal_wall_s": round(anneal_wall, 3),
+        "cycles_round_robin": res["round_robin"].cycles,
+        "cycles_multilevel": res["multilevel"].cycles,
+        "cost_projected": ml.projected_cost,
+        "cost_refined": ml.cost,
+    }]
+
+
+#: guided-annealer knobs: margin 0.0 = only predicted-non-worsening moves
+#: pass the gate; the guided search gets GUIDED_ROUNDS_SCALE x the proposal
+#: budget, which its ~0.2 gate pass-rate turns into well under 0.5x the
+#: unguided run's full-cost evaluations (the CI-gated claim).
+GUIDED_MARGIN = 0.0
+GUIDED_ROUNDS_SCALE = 2
+
+
+def run_guided():
+    """Two-stage surrogate-guided annealing vs the plain PR-4 annealer.
+
+    Tracked claim (CI-gated in ``check_bench.py``): per fig1 workload the
+    guided search reaches ``cycles_guided <= cycles_unguided`` while its
+    ``eval_ratio`` — full-cost evaluations over the unguided budget — stays
+    ``<= GUIDED_EVAL_RATIO_MAX``. Both annealers and the gate are integer/
+    deterministic, so every number here is bit-reproducible.
+    """
+    rows = []
+    cfg = OverlayConfig(scheduler="ooo", max_cycles=4_000_000)
+    for name, (blocks, bs, border), (nx, ny), acfg in PLACEMENT_WORKLOADS:
+        g = wl.arrow_lu_graph(blocks, bs, border, seed=3)
+        t0 = time.time()
+        model, _, _ = _fitted_model(name, g, nx, ny, cfg)
+        unguided = _annealed(name, g, nx, ny, acfg)
+        gcfg = dataclasses.replace(acfg,
+                                   rounds=GUIDED_ROUNDS_SCALE * acfg.rounds)
+        guided = place.anneal_placement(g, nx, ny, gcfg, guide=model,
+                                        guide_margin=GUIDED_MARGIN)
+        # The unguided placement's simulation is reused from the placement
+        # section when available (shape padding is result-invariant, so a
+        # joint or solo evaluation gives identical cycles).
+        unguided_sim = _ANNEAL_SIM_CACHE.get((name, nx, ny, acfg))
+        to_sim = {"guided": guided.node_pe}
+        if unguided_sim is None:
+            to_sim["unguided"] = unguided.node_pe
+        res = place.evaluate_placements(g, nx, ny, to_sim, cfgs=cfg)
+        if unguided_sim is not None:
+            res["unguided"] = unguided_sim
+        wall = time.time() - t0
+        assert all(r.done for r in res.values()), name
+        unguided_evals = acfg.replicas * acfg.rounds * acfg.steps
+        rows.append({
+            "name": f"guided_{name}",
+            "us_per_call": round(1e6 * wall, 1),
+            # headline: full-cost evaluations vs the unguided budget (<1 ==
+            # the surrogate gate is doing the screening)
+            "derived": round(guided.cost_evals / unguided_evals, 4),
+            "nodes": g.num_nodes,
+            "edges": g.num_edges,
+            "grid": [nx, ny],
+            "wall_s": round(wall, 3),
+            "cycles_unguided": res["unguided"].cycles,
+            "cycles_guided": res["guided"].cycles,
+            "cost_unguided": unguided.cost,
+            "cost_guided": guided.cost,
+            "cost_evals": guided.cost_evals,
+            "cost_evals_unguided": unguided_evals,
+            "proposals_guided": guided.proposals,
+            "eval_ratio": round(guided.cost_evals / unguided_evals, 4),
+            "guide_margin": GUIDED_MARGIN,
+            "guide_rounds": gcfg.rounds,
+        })
+    return rows
+
+
+#: fig1-full tracked row (``--full`` only): budgeted multilevel placement +
+#: simulation of the ~470K-node paper-scale LU DAG vs the round-robin
+#: default. The graph itself comes from the on-disk cache
+#: (``experiments/graph_cache/``, primed by CI's cache step).
+FIG1_FULL_GRID = (16, 16)
+FIG1_FULL_COARSE = place.AnnealConfig(replicas=8, rounds=24, steps=2048,
+                                      seed=0)
+FIG1_FULL_REFINE = place.AnnealConfig(replicas=4, rounds=6, steps=2048,
+                                      seed=0)
+#: ratio 32 (~20K clusters for ~256 PEs) rather than 64: on the
+#: unstructured fig1-full LU DAG a coarser quotient can't balance the
+#: wavefronts and loses to round-robin; at 32 the same budget wins ~1.2x.
+FIG1_FULL_RATIO = 32
+
+
+def run_fig1_full():
+    g = wl.fig1_full()
+    nx, ny = FIG1_FULL_GRID
+    t0 = time.time()
+    ml = place.multilevel_anneal(g, nx, ny, FIG1_FULL_COARSE,
+                                 ratio=FIG1_FULL_RATIO,
+                                 refine=FIG1_FULL_REFINE)
+    anneal_wall = time.time() - t0
+    cfg = OverlayConfig(scheduler="ooo", max_cycles=16_000_000)
+    res = place.evaluate_placements(g, nx, ny, {
+        "round_robin": "round_robin",
+        "multilevel": ml.node_pe,
+    }, cfgs=cfg)
+    wall = time.time() - t0
+    assert all(r.done for r in res.values())
+    acfg, rcfg = FIG1_FULL_COARSE, FIG1_FULL_REFINE
+    proposals = (acfg.replicas * acfg.rounds * acfg.steps
+                 + rcfg.replicas * rcfg.rounds * rcfg.steps)
+    return [{
+        "name": f"fig1_full_n{g.num_nodes}",
+        "us_per_call": round(1e6 * wall, 1),
+        # headline: cycle ratio round_robin / multilevel (>1 == win)
+        "derived": round(res["round_robin"].cycles
+                         / res["multilevel"].cycles, 4),
+        "nodes": g.num_nodes,
+        "edges": g.num_edges,
+        "grid": [nx, ny],
+        "clusters": ml.num_clusters,
+        "coarsen_ratio": FIG1_FULL_RATIO,
         "proposal_budget": proposals,
         "wall_s": round(wall, 3),
         "anneal_wall_s": round(anneal_wall, 3),

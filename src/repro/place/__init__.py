@@ -27,6 +27,7 @@ everywhere and is bit-identical to the pre-subsystem engine — committed
 benchmark cycle counts do not move unless a placement is asked for.
 """
 from .anneal import (  # noqa: F401
+    GuidedPlacementResult,
     PlacementResult,
     anneal_placement,
     anneal_tables,

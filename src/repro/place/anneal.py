@@ -55,6 +55,32 @@ class PlacementResult:
         return 1.0 - self.cost / max(1, self.init_cost)
 
 
+@dataclasses.dataclass(frozen=True)
+class GuidedPlacementResult(PlacementResult):
+    """:class:`PlacementResult` of a surrogate-guided search.
+
+    ``cost_evals`` counts the proposals that passed the surrogate gate and
+    therefore reached the integer cost/accept rule (ungated proposals under
+    ``guide_every > 1`` count too); ``proposals`` is the total budget
+    ``replicas * rounds * steps`` — what an *unguided* run of the same
+    config would have cost-evaluated. Both are exact deterministic integers,
+    so the BENCH ``guided`` section CI-gates the ratio.
+
+    The counter is an *accounting* metric — the proxy-in-the-loop claim for
+    systems where evaluating the true cost dominates. Inside this
+    branchless jitted kernel every delta is still computed, and each
+    proposal additionally pays the O(degree)+O(P) surrogate update, so
+    guided wall-clock per proposal is higher, not lower.
+    """
+
+    cost_evals: int = 0
+    proposals: int = 0
+
+    @property
+    def eval_ratio(self) -> float:
+        return self.cost_evals / max(1, self.proposals)
+
+
 def incidence_table(g: DataflowGraph, w_edge: np.ndarray):
     """Padded per-node incident-edge table for O(degree) move deltas.
 
@@ -66,25 +92,21 @@ def incidence_table(g: DataflowGraph, w_edge: np.ndarray):
     return incidence_from_edges(src, dst, w_edge, g.num_nodes)
 
 
-def incidence_from_edges(src: np.ndarray, dst: np.ndarray,
-                         w_edge: np.ndarray, n: int):
-    """:func:`incidence_table` over flat ``(src, dst)`` edge arrays.
+def incidence_layout(src: np.ndarray, dst: np.ndarray, n: int):
+    """Shared incidence layout: each edge appears once per endpoint.
 
-    The annealer itself only needs incident-edge tables, not a
-    :class:`DataflowGraph` — this is the entry point the multilevel
-    coarsener (:mod:`repro.place.coarsen`) uses to anneal *cluster*-level
-    quotient graphs with the very same jitted search kernel.
+    Returns ``(owner, pos, order, d_max)`` — the owning node of each
+    (sorted) entry, its position within the owner's row, the sort
+    permutation over the doubled ``[src; dst]`` edge list, and the padded
+    row width. Both the weight tables (:func:`incidence_from_edges`) and
+    arbitrary per-edge payloads (:func:`incidence_payload`) scatter through
+    this one layout, so their entries line up index-for-index.
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
-    w_edge = np.asarray(w_edge, dtype=np.int32)
     owner = np.concatenate([src, dst])
-    other = np.concatenate([dst, src]).astype(np.int32)
-    w = np.concatenate([w_edge, w_edge])
-    out = np.concatenate([np.ones_like(src, bool), np.zeros_like(dst, bool)])
-
     order = np.argsort(owner, kind="stable")
-    owner, other, w, out = owner[order], other[order], w[order], out[order]
+    owner = owner[order]
     m = owner.shape[0]
     # Position of each entry within its owner's group (same trick as the
     # slot assigner): running index minus the group's start index.
@@ -94,15 +116,106 @@ def incidence_from_edges(src: np.ndarray, dst: np.ndarray,
         starts[group_start] = group_start
         starts = np.maximum.accumulate(starts)
     pos = np.arange(m) - starts
-
     d_max = max(1, int(pos.max(initial=0)) + 1)
+    return owner, pos, order, d_max
+
+
+def incidence_from_edges(src: np.ndarray, dst: np.ndarray,
+                         w_edge: np.ndarray, n: int, *, layout=None):
+    """:func:`incidence_table` over flat ``(src, dst)`` edge arrays.
+
+    The annealer itself only needs incident-edge tables, not a
+    :class:`DataflowGraph` — this is the entry point the multilevel
+    coarsener (:mod:`repro.place.coarsen`) uses to anneal *cluster*-level
+    quotient graphs with the very same jitted search kernel.
+    """
+    w_edge = np.asarray(w_edge, dtype=np.int32)
+    other = np.concatenate([np.asarray(dst, np.int64),
+                            np.asarray(src, np.int64)]).astype(np.int32)
+    w = np.concatenate([w_edge, w_edge])
+    out = np.concatenate([np.ones(len(w_edge), bool),
+                          np.zeros(len(w_edge), bool)])
+
+    owner, pos, order, d_max = layout or incidence_layout(src, dst, n)
     nbr = np.zeros((n, d_max), dtype=np.int32)
     w_pad = np.zeros((n, d_max), dtype=np.int32)
     is_out = np.zeros((n, d_max), dtype=bool)
-    nbr[owner, pos] = other
-    w_pad[owner, pos] = w
-    is_out[owner, pos] = out
+    nbr[owner, pos] = other[order]
+    w_pad[owner, pos] = w[order]
+    is_out[owner, pos] = out[order]
     return nbr, w_pad, is_out
+
+
+def incidence_payload(src: np.ndarray, dst: np.ndarray,
+                      values: np.ndarray, n: int, *, layout=None) -> np.ndarray:
+    """[N, D] per-incident-edge payload table in the exact layout of
+    :func:`incidence_from_edges` (0 marks padding) — the guided annealer
+    uses it to ride critical-edge / multiplicity tables alongside the
+    weights."""
+    values = np.asarray(values)
+    owner, pos, order, d_max = layout or incidence_layout(src, dst, n)
+    out = np.zeros((n, d_max), dtype=values.dtype)
+    out[owner, pos] = np.concatenate([values, values])[order]
+    return out
+
+
+def _pe_loads(pe, w_node, num_pes: int):
+    """[P] int64 criticality-weighted item load per PE."""
+    return jnp.zeros(num_pes, jnp.int64).at[pe].add(w_node.astype(jnp.int64))
+
+
+def _placement_cost(pe, nbr, w_inc, is_out, w_node, pw, nx: int, ny: int):
+    """Full integer model cost of one [N] placement (traffic + pressure).
+
+    Each incidence entry appears once per endpoint; out-edges only, so
+    every edge is counted exactly once.
+    """
+    n = pe.shape[0]
+    nbr_pe = pe[jnp.clip(nbr, 0, n - 1)]
+    hop = torus_hops(pe[:, None], nbr_pe, nx, ny)
+    traffic = jnp.sum(jnp.where(is_out, w_inc, 0).astype(jnp.int64)
+                      * hop.astype(jnp.int64))
+    loads = _pe_loads(pe, w_node, nx * ny)
+    return traffic + pw * jnp.sum(loads * loads)
+
+
+def _move_delta(pe, load, i, q, nbr, w_inc, is_out, w_node, pw,
+                nx: int, ny: int):
+    """O(degree) integer cost delta of moving item ``i`` to PE ``q``.
+
+    Returns ``(delta, p, wn)`` — the delta, the item's current PE, and its
+    int64 weight (what the accept commit needs). Shared by the plain and
+    guided kernels so their objectives cannot drift apart; both pinned
+    bit-exact by the open-gate equivalence test.
+    """
+    p = pe[i]
+    nb, wv, out = nbr[i], w_inc[i], is_out[i]
+    nbr_pe = pe[nb]
+    old_h = jnp.where(out, torus_hops(p, nbr_pe, nx, ny),
+                      torus_hops(nbr_pe, p, nx, ny))
+    new_h = jnp.where(out, torus_hops(q, nbr_pe, nx, ny),
+                      torus_hops(nbr_pe, q, nx, ny))
+    d_traffic = jnp.sum(wv.astype(jnp.int64)
+                        * (new_h - old_h).astype(jnp.int64))
+    wn = w_node[i].astype(jnp.int64)
+    d_pressure = 2 * wn * (load[q] - load[p] + wn)
+    return d_traffic + pw * d_pressure, p, wn
+
+
+def _pt_take(costs, parity):
+    """[R] replica-permutation indices of one parallel-tempering exchange:
+    the lower-cost configuration of each adjacent ladder pair migrates
+    toward the cold (low-r) end. Shared by the plain and guided kernels so
+    their swap rules cannot drift apart."""
+    r = jnp.arange(costs.shape[0])
+    off = r - parity
+    partner = jnp.where(off < 0, r,
+                        jnp.where(off % 2 == 0, r + 1, r - 1))
+    partner = jnp.clip(partner, 0, costs.shape[0] - 1)
+    lo = jnp.minimum(r, partner)
+    hi = jnp.maximum(r, partner)
+    swap = (partner != r) & (costs[hi] < costs[lo])
+    return jnp.where(swap, partner, r)
 
 
 def _thresholds(acfg: AnnealConfig) -> np.ndarray:
@@ -129,17 +242,10 @@ def _anneal_jit(init_pe, nbr, w_inc, is_out, w_node, thresholds, key,
     pw = jnp.int64(pressure_weight)
 
     def loads_of(pe):
-        return jnp.zeros(P, jnp.int64).at[pe].add(w_node.astype(jnp.int64))
+        return _pe_loads(pe, w_node, P)
 
     def full_cost(pe):
-        # Each incidence entry appears once per endpoint; out-edges only, so
-        # every edge is counted exactly once.
-        nbr_pe = pe[jnp.clip(nbr, 0, N - 1)]
-        hop = torus_hops(pe[:, None], nbr_pe, nx, ny)
-        traffic = jnp.sum(jnp.where(is_out, w_inc, 0).astype(jnp.int64)
-                          * hop.astype(jnp.int64))
-        loads = loads_of(pe)
-        return traffic + pw * jnp.sum(loads * loads)
+        return _placement_cost(pe, nbr, w_inc, is_out, w_node, pw, nx, ny)
 
     def propose(st, key, thresh):
         pe, load, cost = st
@@ -148,20 +254,8 @@ def _anneal_jit(init_pe, nbr, w_inc, is_out, w_node, thresholds, key,
         # ambient x64 mode (bit-determinism contract).
         i = jax.random.randint(k1, (), 0, N, dtype=jnp.int32)
         q = jax.random.randint(k2, (), 0, P, dtype=jnp.int32)
-        p = pe[i]
-
-        nb, wv, out = nbr[i], w_inc[i], is_out[i]
-        nbr_pe = pe[nb]
-        old_h = jnp.where(out, torus_hops(p, nbr_pe, nx, ny),
-                          torus_hops(nbr_pe, p, nx, ny))
-        new_h = jnp.where(out, torus_hops(q, nbr_pe, nx, ny),
-                          torus_hops(nbr_pe, q, nx, ny))
-        d_traffic = jnp.sum(wv.astype(jnp.int64)
-                            * (new_h - old_h).astype(jnp.int64))
-        wn = w_node[i].astype(jnp.int64)
-        d_pressure = 2 * wn * (load[q] - load[p] + wn)
-        delta = d_traffic + pw * d_pressure
-
+        delta, p, wn = _move_delta(pe, load, i, q, nbr, w_inc, is_out,
+                                   w_node, pw, nx, ny)
         accept = (delta <= thresh) & (p != q)
         pe = pe.at[i].set(jnp.where(accept, q, p))
         load = load.at[p].add(jnp.where(accept, -wn, 0))
@@ -176,17 +270,7 @@ def _anneal_jit(init_pe, nbr, w_inc, is_out, w_node, thresholds, key,
         return (st, keys), None
 
     def pt_swap(st, costs, parity):
-        """Deterministic replica exchange: the lower-cost configuration of
-        each adjacent ladder pair migrates toward the cold (low-r) end."""
-        r = jnp.arange(R)
-        off = r - parity
-        partner = jnp.where(off < 0, r,
-                            jnp.where(off % 2 == 0, r + 1, r - 1))
-        partner = jnp.clip(partner, 0, R - 1)
-        lo = jnp.minimum(r, partner)
-        hi = jnp.maximum(r, partner)
-        swap = (partner != r) & (costs[hi] < costs[lo])
-        take = jnp.where(swap, partner, r)
+        take = _pt_take(costs, parity)
         return jax.tree.map(lambda a: a[take], st), costs[take]
 
     def round_body(carry, parity):
@@ -210,6 +294,100 @@ def _anneal_jit(init_pe, nbr, w_inc, is_out, w_node, thresholds, key,
     return best_pe, best_cost, cost0[0]
 
 
+@functools.partial(jax.jit, static_argnames=("nx", "ny", "rounds", "steps",
+                                             "pressure_weight", "guide_every"))
+def _anneal_guided_jit(init_pe, nbr, w_inc, is_out, w_node, thresholds, key,
+                       ga, q_margin, *, nx: int, ny: int, rounds: int,
+                       steps: int, pressure_weight: int, guide_every: int):
+    """Two-stage-accept variant of :func:`_anneal_jit`.
+
+    Every proposal is first scored by the integer-quantized surrogate via an
+    O(degree) incremental feature delta (:mod:`repro.surrogate.delta`); only
+    proposals the surrogate rates promising (``dscore <= q_margin``, on
+    steps selected by ``guide_every``) proceed to the usual integer
+    cost/accept rule. The PRNG stream, cost arithmetic, best tracking, and
+    PT exchange are identical to the unguided kernel, so with the gate wide
+    open (``q_margin = int64 max``) the trajectory reproduces
+    :func:`_anneal_jit` bit-for-bit (pinned in ``tests/test_guided.py``).
+    """
+    from ..surrogate.delta import apply_move, state_init
+
+    R = thresholds.shape[0]
+    N = init_pe.shape[0]
+    P = nx * ny
+    pw = jnp.int64(pressure_weight)
+
+    def loads_of(pe):
+        return _pe_loads(pe, w_node, P)
+
+    def full_cost(pe):
+        return _placement_cost(pe, nbr, w_inc, is_out, w_node, pw, nx, ny)
+
+    def propose(st, key, thresh, j):
+        pe, load, cost, gst, evals = st
+        k1, k2 = jax.random.split(key)
+        i = jax.random.randint(k1, (), 0, N, dtype=jnp.int32)
+        q = jax.random.randint(k2, (), 0, P, dtype=jnp.int32)
+
+        # Stage 1 — surrogate gate: exact incremental features, quantized
+        # predicted-cycle delta. Gate-rejected proposals are dead on
+        # arrival: the cost rule cannot accept them, and they don't count
+        # as full-cost evaluations. (The branchless jitted kernel still
+        # *computes* every delta — the counter is the accounting metric for
+        # systems where the true cost evaluation is the scarce resource,
+        # not a wall-clock claim about this kernel.)
+        gst_new, dscore = apply_move(ga, gst, pe, i, q, nx=nx, ny=ny)
+        gated = (j % guide_every) == 0
+        promising = jnp.where(gated, dscore <= q_margin, True)
+
+        # Stage 2 — the unguided kernel's integer cost/threshold accept.
+        delta, p, wn = _move_delta(pe, load, i, q, nbr, w_inc, is_out,
+                                   w_node, pw, nx, ny)
+        accept = promising & (delta <= thresh) & (p != q)
+        pe = pe.at[i].set(jnp.where(accept, q, p))
+        load = load.at[p].add(jnp.where(accept, -wn, 0))
+        load = load.at[q].add(jnp.where(accept, wn, 0))
+        cost = cost + jnp.where(accept, delta, jnp.int64(0))
+        gst = jax.tree.map(lambda a, b: jnp.where(accept, a, b), gst_new, gst)
+        evals = evals + promising.astype(jnp.int64)
+        return (pe, load, cost, gst, evals)
+
+    def sweep(st_keys, j):
+        st, keys = st_keys
+        new_keys = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+        step_keys, keys = new_keys[:, 0], new_keys[:, 1]
+        st = jax.vmap(propose, in_axes=(0, 0, 0, None))(
+            st, step_keys, thresholds, j)
+        return (st, keys), None
+
+    def round_body(carry, parity):
+        st, keys, best_pe, best_cost = carry
+        (st, keys), _ = jax.lax.scan(sweep, (st, keys),
+                                     jnp.arange(steps, dtype=jnp.int32))
+        pe, load, cost, gst, evals = st
+        better = cost < best_cost
+        best_cost = jnp.where(better, cost, best_cost)
+        best_pe = jnp.where(better[:, None], pe, best_pe)
+        take = _pt_take(cost, parity)
+        pe, cost = pe[take], cost[take]
+        gst = jax.tree.map(lambda a: a[take], gst)
+        load = jax.vmap(loads_of)(pe)
+        # evals stays un-permuted: the counters belong to the ladder rungs,
+        # not the migrating configurations (their sum is invariant anyway).
+        return ((pe, load, cost, gst, evals), keys, best_pe, best_cost), None
+
+    pe0 = jnp.broadcast_to(init_pe, (R, N)).astype(jnp.int32)
+    load0 = jax.vmap(loads_of)(pe0)
+    cost0 = jax.vmap(full_cost)(pe0)
+    gst0 = jax.vmap(lambda pe: state_init(ga, pe, nx=nx, ny=ny))(pe0)
+    evals0 = jnp.zeros(R, jnp.int64)
+    keys = jax.random.split(key, R)
+    carry = ((pe0, load0, cost0, gst0, evals0), keys, pe0, cost0)
+    parities = jnp.arange(rounds, dtype=jnp.int32) % 2
+    (st, _, best_pe, best_cost), _ = jax.lax.scan(round_body, carry, parities)
+    return best_pe, best_cost, cost0[0], st[4]
+
+
 def anneal_tables(
     n: int,
     nx: int,
@@ -221,6 +399,9 @@ def anneal_tables(
     acfg: AnnealConfig | None = None,
     *,
     init: np.ndarray | None = None,
+    guide=None,
+    guide_every: int = 1,
+    guide_margin: float = 0.0,
 ) -> PlacementResult:
     """Anneal an ``[n]`` item -> PE placement from flat integer edge tables.
 
@@ -229,6 +410,17 @@ def anneal_tables(
     weights ``w_node``, are placed on the ``nx x ny`` torus. This is the
     graph-free core of :func:`anneal_placement`: same jitted kernel, same
     determinism contract, no :class:`DataflowGraph` needed.
+
+    ``guide`` switches on the two-stage surrogate accept: a
+    :class:`repro.surrogate.delta.Guide` (or a fitted
+    :class:`~repro.surrogate.model.SurrogateModel`, converted on the spot)
+    built for the *same* ``n`` items on the same grid — its extractor may
+    weight edges its own way, but it must describe this item set. Proposals
+    whose quantized predicted-cycle delta exceeds ``guide_margin`` (in
+    predicted cycles; ``inf`` disables the gate) are rejected before the
+    integer cost rule; ``guide_every=k`` applies the gate on every k-th
+    proposal of a sweep only. Guided searches return a
+    :class:`GuidedPlacementResult` carrying the exact cost-evaluation count.
     """
     acfg = acfg or AnnealConfig()
     num_pes = nx * ny
@@ -242,24 +434,52 @@ def anneal_tables(
         raise ValueError("init placement references PEs outside the grid")
 
     nbr, w_inc, is_out = incidence_from_edges(src, dst, w_edge, n)
+    # Host numpy throughout: the arrays cross into jax at the jit boundary,
+    # inside the scoped x64 below — an eager jnp.asarray here would silently
+    # truncate the int64 thresholds to int32 when ambient x64 is off.
+    args = (init, nbr, w_inc, is_out, np.asarray(w_node, np.int32),
+            _thresholds(acfg), jax.random.key(acfg.seed))
+    knobs = dict(nx=nx, ny=ny, rounds=acfg.rounds, steps=acfg.steps,
+                 pressure_weight=acfg.pressure_weight)
     # Scoped x64: cost totals are int64 sums of squared loads — they must not
     # wrap on big graphs, and callers shouldn't need global jax_enable_x64.
-    with enable_x64():
-        best_pe, best_cost, init_cost = _anneal_jit(
-            jnp.asarray(init), jnp.asarray(nbr), jnp.asarray(w_inc),
-            jnp.asarray(is_out), jnp.asarray(np.asarray(w_node, np.int32)),
-            jnp.asarray(_thresholds(acfg)), jax.random.key(acfg.seed),
-            nx=nx, ny=ny, rounds=acfg.rounds, steps=acfg.steps,
-            pressure_weight=acfg.pressure_weight)
+    if guide is None:
+        with enable_x64():
+            best_pe, best_cost, init_cost = _anneal_jit(*args, **knobs)
+        evals = None
+    else:
+        from ..surrogate.delta import (Guide, build_guide, guide_arrays,
+                                       quantize_margin)
+
+        if not isinstance(guide, Guide):
+            guide = build_guide(guide)
+        ex = guide.extractor
+        if ex.num_items != n or (ex.nx, ex.ny) != (nx, ny):
+            raise ValueError(
+                f"guide was built for {ex.num_items} items on a "
+                f"{ex.nx}x{ex.ny} grid; this search places {n} items on "
+                f"{nx}x{ny}")
+        if guide_every < 1:
+            raise ValueError(f"guide_every must be >= 1, got {guide_every}")
+        with enable_x64():
+            best_pe, best_cost, init_cost, evals = _anneal_guided_jit(
+                *args, guide_arrays(guide),
+                np.int64(quantize_margin(guide_margin)),
+                guide_every=int(guide_every), **knobs)
     best_pe = np.asarray(best_pe)
     best_cost = np.asarray(best_cost)
     b = int(best_cost.argmin())
-    return PlacementResult(
+    fields = dict(
         node_pe=best_pe[b].astype(np.int32),
         cost=int(best_cost[b]),
         init_cost=int(init_cost),
         replica_costs=best_cost.astype(np.int64),
     )
+    if guide is None:
+        return PlacementResult(**fields)
+    return GuidedPlacementResult(
+        **fields, cost_evals=int(np.asarray(evals).sum()),
+        proposals=acfg.replicas * acfg.rounds * acfg.steps)
 
 
 def anneal_placement(
@@ -271,12 +491,18 @@ def anneal_placement(
     metric: str = "height",
     init: np.ndarray | None = None,
     model: CostModel | None = None,
+    guide=None,
+    guide_every: int = 1,
+    guide_margin: float = 0.0,
 ) -> PlacementResult:
     """Search a node -> PE placement for ``g`` on the ``nx x ny`` torus.
 
     ``init`` defaults to a uniform-random placement drawn from
     ``acfg.seed`` — the baseline the annealer is guaranteed (by best-so-far
-    tracking that includes the init) to never score worse than.
+    tracking that includes the init) to never score worse than. ``guide``
+    (a fitted :class:`~repro.surrogate.model.SurrogateModel` or a prebuilt
+    :class:`~repro.surrogate.delta.Guide` for this graph and grid) switches
+    on the two-stage surrogate accept — see :func:`anneal_tables`.
     """
     acfg = acfg or AnnealConfig()
     model = model or build_cost_model(
@@ -285,4 +511,5 @@ def anneal_placement(
     src, dst = edge_endpoints(g)
     return anneal_tables(
         g.num_nodes, nx, ny, src, dst, np.asarray(model.w_edge),
-        np.asarray(model.w_node), acfg, init=init)
+        np.asarray(model.w_node), acfg, init=init, guide=guide,
+        guide_every=guide_every, guide_margin=guide_margin)

@@ -30,12 +30,19 @@ from .anneal import anneal_placement
 from .spec import PlacementSpec, coerce
 
 
-def resolve(g: DataflowGraph, nx: int, ny: int, placement=None) -> np.ndarray:
+def resolve(g: DataflowGraph, nx: int, ny: int, placement=None, *,
+            guide_model=None) -> np.ndarray:
     """[N] node -> PE vector for ``placement`` on the ``nx x ny`` grid.
 
     ``placement`` is a PlacementSpec, a strategy name, an explicit [N] array
     (returned as-is), or ``None`` (identity = the partitioner's default
     round-robin — the layout all committed benchmark numbers use).
+
+    A spec with ``guide="surrogate"`` runs the search with the two-stage
+    surrogate accept; ``guide_model`` supplies a prefitted
+    :class:`~repro.surrogate.model.SurrogateModel` for it (must match this
+    graph and grid), otherwise one is fitted on the spot from
+    ``spec.guide_train`` self-generated simulated placements.
     """
     if isinstance(placement, np.ndarray):
         return placement.astype(np.int32)
@@ -43,6 +50,16 @@ def resolve(g: DataflowGraph, nx: int, ny: int, placement=None) -> np.ndarray:
 
     spec = coerce(placement)
     num_pes = nx * ny
+    guide = None
+    if spec.guide == "surrogate":  # spec validation pins strategy to a search
+        guide = guide_model
+        if guide is None:
+            from .. import surrogate as sg
+
+            guide, _, _ = sg.fit_from_sim(
+                g, nx, ny, n_train=spec.guide_train, seed=spec.seed,
+                metric=spec.metric,
+                crit_scale=spec.anneal_config.crit_scale)
     if spec.strategy == "anneal":
         init = None  # anneal_placement defaults to random-from-seed
         if spec.init != "random":
@@ -50,14 +67,16 @@ def resolve(g: DataflowGraph, nx: int, ny: int, placement=None) -> np.ndarray:
                                                     seed=spec.seed))
         return anneal_placement(
             g, nx, ny, spec.anneal_config, metric=spec.metric,
-            init=init).node_pe
+            init=init, guide=guide, guide_every=spec.guide_every,
+            guide_margin=spec.guide_margin).node_pe
     if spec.strategy == "multilevel":
         from .coarsen import multilevel_anneal
 
         return multilevel_anneal(
             g, nx, ny, spec.anneal_config, ratio=spec.coarsen_ratio,
             refine=spec.refine if spec.refine is not None else "auto",
-            metric=spec.metric).node_pe
+            metric=spec.metric, guide=guide, guide_every=spec.guide_every,
+            guide_margin=spec.guide_margin).node_pe
     strategy = "round_robin" if spec.strategy == "identity" else spec.strategy
     return partition.place_nodes(g, num_pes, strategy, seed=spec.seed)
 

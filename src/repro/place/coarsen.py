@@ -156,6 +156,9 @@ def multilevel_anneal(
     refine: AnnealConfig | str | None = "auto",
     clusters: np.ndarray | None = None,
     metric: str = "height",
+    guide=None,
+    guide_every: int = 1,
+    guide_margin: float = 0.0,
 ) -> MultilevelResult:
     """Coarsen ``g`` ~``ratio``x, anneal cluster moves, project back, refine.
 
@@ -166,6 +169,14 @@ def multilevel_anneal(
     an explicit ``None`` skips refinement entirely (the projected placement
     is returned as-is). ``clusters`` overrides the clustering (e.g.
     ``np.arange(N)`` degenerates to the plain PR-3 annealer, bit-exactly).
+
+    ``guide`` (a fitted fine-level :class:`~repro.surrogate.model
+    .SurrogateModel` or :class:`~repro.surrogate.delta.Guide`) turns on the
+    two-stage surrogate accept at *both* levels: the coarse phase consults
+    ``guide.coarsen(clusters)`` — whose quotient features are bit-exactly
+    the fine features of the projected placement, so coarse gate decisions
+    are exactly the fine surrogate's verdict on the projected move — and
+    the refinement phase consults the fine guide directly.
     """
     acfg = acfg or AnnealConfig()
     if isinstance(refine, str):
@@ -185,7 +196,16 @@ def multilevel_anneal(
         g, clusters, metric=metric, crit_scale=acfg.crit_scale)
     c = int(cw_node.shape[0])
 
-    coarse = anneal_tables(c, nx, ny, csrc, cdst, cw_edge, cw_node, acfg)
+    coarse_guide = None
+    if guide is not None:
+        from ..surrogate.delta import Guide, build_guide
+
+        if not isinstance(guide, Guide):
+            guide = build_guide(guide)
+        coarse_guide = guide.coarsen(clusters)
+    coarse = anneal_tables(c, nx, ny, csrc, cdst, cw_edge, cw_node, acfg,
+                           guide=coarse_guide, guide_every=guide_every,
+                           guide_margin=guide_margin)
     node_pe = coarse.node_pe[clusters].astype(np.int32)
 
     model = build_cost_model(g, nx, ny, metric=metric,
@@ -196,7 +216,9 @@ def multilevel_anneal(
     refined = None
     if refine is not None:
         refined = anneal_placement(g, nx, ny, refine, metric=metric,
-                                   init=node_pe, model=model)
+                                   init=node_pe, model=model, guide=guide,
+                                   guide_every=guide_every,
+                                   guide_margin=guide_margin)
         node_pe = refined.node_pe
 
     return MultilevelResult(

@@ -65,6 +65,12 @@ class PlacementSpec:
     ``refine`` knobs — the fig1-full-scale pipeline in
     :mod:`repro.place.coarsen`). ``metric`` picks the criticality labeling
     used for slot assignment and the cost model's weights.
+
+    ``guide="surrogate"`` upgrades either search strategy to the two-stage
+    surrogate-guided accept (knobs ``guide_every`` / ``guide_margin`` /
+    ``guide_train`` below; mechanism in :mod:`repro.surrogate.delta`); in
+    the multilevel pipeline both the coarse cluster-level phase and the
+    fine refinement are guided.
     """
 
     strategy: str = "identity"
@@ -74,6 +80,25 @@ class PlacementSpec:
     #: starting point for "anneal": "random" (the baseline the placer is
     #: guaranteed to never score worse than) or any static strategy.
     init: str = "random"
+    #: "anneal"/"multilevel" only: ``"surrogate"`` switches on the two-stage
+    #: accept — a ridge surrogate fitted on ``guide_train`` self-generated
+    #: simulated placements (:func:`repro.surrogate.fit_from_sim`, seeded
+    #: from ``seed``) pre-screens every proposal via exact O(degree)
+    #: incremental features, and only promising moves reach the integer
+    #: cost rule. ``None`` (default) is the plain PR-3/PR-4 search.
+    guide: str | None = None
+    #: guided only: apply the surrogate gate on every k-th proposal of a
+    #: sweep (1 = every proposal; larger values leave the off-steps
+    #: unguided for extra exploration).
+    guide_every: int = 1
+    #: guided only: accept threshold on the predicted cycle delta — moves
+    #: predicted to add more than this many cycles are rejected before the
+    #: cost rule. 0.0 = only predicted-non-worsening moves; ``inf``
+    #: disables the gate (bit-identical to the unguided annealer).
+    guide_margin: float = 0.0
+    #: guided only: simulated training placements for the auto-fitted
+    #: surrogate when :func:`repro.place.api.resolve` has to fit one.
+    guide_train: int = 24
     #: "multilevel" only: target nodes per cluster for the coarsening pass
     #: (the graph collapses ~coarsen_ratio x before the coarse anneal).
     coarsen_ratio: int = 32
@@ -98,6 +123,21 @@ class PlacementSpec:
         if self.coarsen_ratio < 1:
             raise ValueError(
                 f"coarsen_ratio must be >= 1, got {self.coarsen_ratio}")
+        if self.guide not in (None, "surrogate"):
+            raise ValueError(
+                f"unknown guide {self.guide!r}; known: None, 'surrogate'")
+        if self.guide is not None and self.strategy not in SEARCH_STRATEGIES:
+            # Silently ignoring the guide on a static strategy would let a
+            # "guided" benchmark quietly run an unguided placement.
+            raise ValueError(
+                f"guide={self.guide!r} requires a search strategy "
+                f"{SEARCH_STRATEGIES}, got strategy={self.strategy!r}")
+        if self.guide_every < 1:
+            raise ValueError(
+                f"guide_every must be >= 1, got {self.guide_every}")
+        if self.guide_train < 2:
+            raise ValueError(
+                f"guide_train must be >= 2, got {self.guide_train}")
 
     @property
     def anneal_config(self) -> AnnealConfig:

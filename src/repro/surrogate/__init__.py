@@ -30,10 +30,17 @@ import numpy as np
 
 from ..core.graph import DataflowGraph
 from .data import make_training_set, sample_placements  # noqa: F401
+from .delta import (  # noqa: F401
+    GUIDE_SCALE,
+    Guide,
+    build_guide,
+)
 from .features import (  # noqa: F401
     DEPTH_BUCKETS,
     FeatureExtractor,
     build_features,
+    coarsen_extractor,
+    features_from_tables,
 )
 from .model import (  # noqa: F401
     SurrogateModel,

@@ -1,0 +1,266 @@
+"""O(degree) incremental surrogate features for single-item moves.
+
+The PR-4 surrogate only ever scored *whole* placements: one
+:meth:`FeatureExtractor.features_batch` call per candidate set, O(E) work per
+candidate. A placement annealer proposes ~10^5-10^6 single-node moves — far
+too many for full re-extraction, but each move ``i: p -> q`` only touches
+
+  * the hop terms of the edges incident to ``i`` (traffic, inject/eject,
+    ring loads) — O(degree) via the same padded incidence-table gather the
+    annealer's cost delta uses;
+  * two entries of every per-PE accumulator (loads / counts / depth
+    histogram) — O(1) scatters;
+  * the max / sum-of-squares readouts — O(P) reductions over the carried
+    per-PE vectors (P = grid size, tiny next to E).
+
+:func:`apply_move` therefore maintains a :class:`GuideState` of carried
+integer accumulators and returns the *exact* post-move feature vector: after
+any accepted-move sequence the carried features equal a fresh
+``features_batch`` bit-for-bit (pinned in ``tests/test_guided.py``). That
+exactness is what lets the guided annealer's accept decisions be reproduced
+— and CI-gated — anywhere.
+
+Integer-quantized guide
+-----------------------
+A fitted ridge model predicts ``y_mean + ((f - mu) / sigma) @ beta``; for a
+move only the *delta* matters and the affine parts cancel::
+
+    pred(new) - pred(old) = sum_j (beta_j / sigma_j) * (f_new_j - f_old_j)
+
+Feature deltas are exact int64, but ``beta/sigma`` is float64 — and a float
+accept rule would make the guided search depend on BLAS/XLA rounding, which
+would break the bit-exact CI cycle gates. :func:`build_guide` therefore
+quantizes ``gamma = beta/sigma`` to integers (``gamma_q = rint(gamma *
+GUIDE_SCALE)``), so the whole two-stage accept — surrogate gate *and*
+integer cost threshold — is int64 arithmetic, bit-deterministic across
+machines like everything else in :mod:`repro.place.anneal`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .features import (
+    DEPTH_BUCKETS,
+    FeatureExtractor,
+    assemble_features,
+    coarsen_extractor,
+)
+from .model import SurrogateModel
+
+#: fixed-point scale of the quantized guide coefficients: predicted-cycle
+#: deltas (and ``guide_margin``) are compared in units of 1/GUIDE_SCALE
+#: cycles.
+GUIDE_SCALE = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class Guide:
+    """A fitted surrogate, reduced to what move scoring needs.
+
+    ``gamma_q`` are the integer-quantized per-feature slopes; the extractor
+    supplies the static tables the deltas are computed from. Build with
+    :func:`build_guide`; derive a coarse-level guide for a cluster quotient
+    graph with :meth:`coarsen` (same slopes — quotient features are exactly
+    the projected fine features, see
+    :func:`repro.surrogate.features.coarsen_extractor`).
+    """
+
+    extractor: FeatureExtractor
+    gamma_q: np.ndarray   # [F] int64, rint(beta / sigma * GUIDE_SCALE)
+
+    def coarsen(self, clusters: np.ndarray) -> "Guide":
+        return Guide(extractor=coarsen_extractor(self.extractor, clusters),
+                     gamma_q=self.gamma_q)
+
+
+def build_guide(model: SurrogateModel) -> Guide:
+    """Quantize a fitted :class:`SurrogateModel` into an annealer guide."""
+    gamma = np.asarray(model.beta, np.float64) / np.asarray(model.sigma,
+                                                            np.float64)
+    return Guide(extractor=model.extractor,
+                 gamma_q=np.rint(gamma * GUIDE_SCALE).astype(np.int64))
+
+
+def quantize_margin(margin: float) -> int:
+    """``guide_margin`` (predicted cycles) -> the int64 gate threshold."""
+    if not np.isfinite(margin):
+        return int(np.iinfo(np.int64).max) if margin > 0 \
+            else int(np.iinfo(np.int64).min)
+    return int(np.rint(float(margin) * GUIDE_SCALE))
+
+
+class GuideArrays(NamedTuple):
+    """Static tables of a :class:`Guide` as a jit-friendly pytree.
+
+    Raw ``[E]``/``[N]`` tables drive the O(E) :func:`state_init`; the
+    ``*_inc [N, D]`` incidence-layout tables (one row per item, padded to the
+    max total degree, zero-weight entries are padding) drive the O(degree)
+    :func:`apply_move` gathers, exactly like the annealer's cost tables.
+    Built as host int64 numpy (:func:`guide_arrays`); the jit boundary
+    converts them under the annealer's scoped x64.
+    """
+
+    src: np.ndarray        # [E] int32
+    dst: np.ndarray        # [E] int32
+    w_edge: np.ndarray     # [E] int64
+    c_unit: np.ndarray     # [E] int64
+    e_unit: np.ndarray     # [E] int64
+    w_node: np.ndarray     # [N] int64
+    n_unit: np.ndarray     # [N] int64
+    w_bucket: np.ndarray   # [N, DEPTH_BUCKETS] int64
+    nbr: np.ndarray        # [N, D] int32 incident-edge other endpoint
+    out_inc: np.ndarray    # [N, D] bool: item is the edge source
+    w_inc: np.ndarray      # [N, D] int64 edge weight (0 = padding)
+    c_inc: np.ndarray      # [N, D] int64 critical-edge multiplicity
+    u_inc: np.ndarray      # [N, D] int64 edge multiplicity
+    gamma_q: np.ndarray    # [F] int64
+
+
+class GuideState(NamedTuple):
+    """Carried per-placement feature accumulators + the assembled features."""
+
+    t_w: jnp.ndarray        # scalar int64 weighted hop traffic
+    t_u: jnp.ndarray        # scalar int64 unweighted hop traffic
+    t_c: jnp.ndarray        # scalar int64 critical-chain hop traffic
+    loads: jnp.ndarray      # [P] int64 criticality-weighted load
+    counts: jnp.ndarray     # [P] int64 item-count load
+    inject: jnp.ndarray     # [P] int64 remote packets leaving
+    eject: jnp.ndarray      # [P] int64 remote packets landing
+    ring_x: jnp.ndarray     # [ny] int64 X-ring hop-weighted traffic
+    ring_y: jnp.ndarray     # [nx] int64 Y-ring hop-weighted traffic
+    lvl: jnp.ndarray        # [DEPTH_BUCKETS, P] int64 per-level load
+    feats: jnp.ndarray      # [F] int64 assembled feature vector
+
+
+def guide_arrays(guide: Guide) -> GuideArrays:
+    """Pack a :class:`Guide` into device tables (host-side, once per search)."""
+    # Deferred import: repro.place imports this module's consumers at package
+    # init; the incidence builders live with the annealer they were made for.
+    from ..place.anneal import (incidence_from_edges, incidence_layout,
+                                incidence_payload)
+
+    ex = guide.extractor
+    n = ex.num_items
+    # One O(E log E) layout sort serves all three incidence tables.
+    layout = incidence_layout(ex.src, ex.dst, n)
+    nbr, w_inc, out_inc = incidence_from_edges(ex.src, ex.dst, ex.w_edge, n,
+                                               layout=layout)
+    c_inc = incidence_payload(ex.src, ex.dst, ex.c_unit, n, layout=layout)
+    u_inc = incidence_payload(ex.src, ex.dst, ex.e_unit, n, layout=layout)
+    # Host numpy int64 throughout: the arrays cross into jax at the jit
+    # boundary, inside the annealer's scoped x64 (an eager jnp.asarray here
+    # would silently truncate to int32 when x64 is off).
+    i64 = lambda a: np.asarray(a, np.int64)
+    return GuideArrays(
+        src=np.asarray(ex.src), dst=np.asarray(ex.dst),
+        w_edge=i64(ex.w_edge), c_unit=i64(ex.c_unit), e_unit=i64(ex.e_unit),
+        w_node=i64(ex.w_node), n_unit=i64(ex.n_unit),
+        w_bucket=i64(ex.w_bucket),
+        nbr=np.asarray(nbr), out_inc=np.asarray(out_inc),
+        w_inc=i64(w_inc),
+        c_inc=i64(c_inc), u_inc=i64(u_inc),
+        gamma_q=i64(guide.gamma_q),
+    )
+
+
+def state_init(ga: GuideArrays, pe, *, nx: int, ny: int) -> GuideState:
+    """Full O(E) feature-state computation of one ``[N]`` placement.
+
+    Must run under scoped x64 (the annealer already does); arithmetic
+    mirrors :meth:`FeatureExtractor.features_batch` term for term.
+    """
+    P = nx * ny
+    pe = jnp.asarray(pe, jnp.int32)
+    ps, pd = pe[ga.src], pe[ga.dst]
+    sx, sy = ps // ny, ps % ny
+    dx, dy = pd // ny, pd % ny
+    hx = jnp.mod(dx - sx, nx).astype(jnp.int64)
+    hy = jnp.mod(dy - sy, ny).astype(jnp.int64)
+    hops = hx + hy
+    remote = (hops > 0).astype(jnp.int64)
+
+    t_w = jnp.sum(ga.w_edge * hops)
+    t_u = jnp.sum(ga.e_unit * hops)
+    t_c = jnp.sum(ga.c_unit * hops)
+    loads = jnp.zeros(P, jnp.int64).at[pe].add(ga.w_node)
+    counts = jnp.zeros(P, jnp.int64).at[pe].add(ga.n_unit)
+    inject = jnp.zeros(P, jnp.int64).at[ps].add(ga.e_unit * remote)
+    eject = jnp.zeros(P, jnp.int64).at[pd].add(ga.e_unit * remote)
+    ring_x = jnp.zeros(ny, jnp.int64).at[sy].add(ga.w_edge * hx)
+    ring_y = jnp.zeros(nx, jnp.int64).at[dx].add(ga.w_edge * hy)
+    lvl = jnp.zeros((DEPTH_BUCKETS, P), jnp.int64).at[:, pe].add(ga.w_bucket.T)
+    feats = assemble_features(t_w, t_u, t_c, loads, counts, inject, eject,
+                              ring_x, ring_y, lvl)
+    return GuideState(t_w=t_w, t_u=t_u, t_c=t_c, loads=loads, counts=counts,
+                      inject=inject, eject=eject, ring_x=ring_x,
+                      ring_y=ring_y, lvl=lvl, feats=feats)
+
+
+def apply_move(ga: GuideArrays, st: GuideState, pe, i, q,
+               *, nx: int, ny: int) -> tuple[GuideState, jnp.ndarray]:
+    """Tentative post-move state of ``i -> q`` plus the quantized score.
+
+    Returns ``(new_state, dscore_q)`` where ``dscore_q = gamma_q @ (f_new -
+    f_old)`` — ``GUIDE_SCALE`` times the predicted cycle delta, exact int64.
+    The caller commits or discards the state based on its accept rule (the
+    annealer selects with ``jnp.where``; a rejected move simply keeps the old
+    state). Only ``i``'s incident edges are gathered — O(degree) — plus O(P)
+    reductions for the max/sum-of-squares readouts.
+    """
+    pe = jnp.asarray(pe, jnp.int32)
+    p = pe[i]
+    nb, out = ga.nbr[i], ga.out_inc[i]
+    w, cu, uu = ga.w_inc[i], ga.c_inc[i], ga.u_inc[i]   # 0 on padding entries
+    o = pe[nb]
+    ox, oy = o // ny, o % ny
+    px, py = p // ny, p % ny
+    qx, qy = q // ny, q % ny
+
+    # Dimension-ordered hops per incident edge, before/after the move: for
+    # out-edges i is the source (hx = dst_x - src_x mod nx), for in-edges the
+    # destination. Padding entries carry weight/multiplicity 0 everywhere
+    # they are summed or scattered, so they contribute nothing.
+    hx_old = jnp.where(out, jnp.mod(ox - px, nx),
+                       jnp.mod(px - ox, nx)).astype(jnp.int64)
+    hy_old = jnp.where(out, jnp.mod(oy - py, ny),
+                       jnp.mod(py - oy, ny)).astype(jnp.int64)
+    hx_new = jnp.where(out, jnp.mod(ox - qx, nx),
+                       jnp.mod(qx - ox, nx)).astype(jnp.int64)
+    hy_new = jnp.where(out, jnp.mod(oy - qy, ny),
+                       jnp.mod(qy - oy, ny)).astype(jnp.int64)
+    h_old, h_new = hx_old + hy_old, hx_new + hy_new
+    dh = h_new - h_old
+    r_old = (h_old > 0).astype(jnp.int64)
+    r_new = (h_new > 0).astype(jnp.int64)
+
+    src_old = jnp.where(out, p, o)
+    src_new = jnp.where(out, q, o)
+    dst_old = jnp.where(out, o, p)
+    dst_new = jnp.where(out, o, q)
+
+    t_w = st.t_w + jnp.sum(w * dh)
+    t_u = st.t_u + jnp.sum(uu * dh)
+    t_c = st.t_c + jnp.sum(cu * dh)
+    inject = st.inject.at[src_old].add(-uu * r_old).at[src_new].add(uu * r_new)
+    eject = st.eject.at[dst_old].add(-uu * r_old).at[dst_new].add(uu * r_new)
+    ring_x = st.ring_x.at[src_old % ny].add(-w * hx_old) \
+                      .at[src_new % ny].add(w * hx_new)
+    ring_y = st.ring_y.at[dst_old // ny].add(-w * hy_old) \
+                      .at[dst_new // ny].add(w * hy_new)
+
+    wn, nu = ga.w_node[i], ga.n_unit[i]
+    loads = st.loads.at[p].add(-wn).at[q].add(wn)
+    counts = st.counts.at[p].add(-nu).at[q].add(nu)
+    lvl = st.lvl.at[:, p].add(-ga.w_bucket[i]).at[:, q].add(ga.w_bucket[i])
+
+    feats = assemble_features(t_w, t_u, t_c, loads, counts, inject, eject,
+                              ring_x, ring_y, lvl)
+    dscore = jnp.sum(ga.gamma_q * (feats - st.feats))
+    new = GuideState(t_w=t_w, t_u=t_u, t_c=t_c, loads=loads, counts=counts,
+                     inject=inject, eject=eject, ring_x=ring_x,
+                     ring_y=ring_y, lvl=lvl, feats=feats)
+    return new, dscore

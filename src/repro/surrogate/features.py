@@ -23,6 +23,29 @@ stresses the overlay, using only static graph tables (no simulation):
 Every term is an integer accumulation (scoped x64 — no global flag), so the
 feature matrix is bit-reproducible across machines, and the whole batch
 extracts as one ``jax.vmap`` on-device.
+
+Multiplicity tables
+-------------------
+The extractor carries three *unit* tables that default to the trivial values
+at the fine (one-row-per-graph-edge) level but let a **quotient graph** of
+node clusters compute the exact same features its projected fine placement
+would have (:func:`coarsen_extractor`):
+
+  * ``e_unit``  — [E] edges represented by this (aggregated) edge (fine: 1);
+  * ``c_unit``  — [E] *critical* edges represented (fine: the 0/1 crit flag);
+  * ``n_unit``  — [N] nodes represented by this item (fine: 1);
+  * ``w_bucket`` — [N, DEPTH_BUCKETS] criticality weight per ASAP-depth
+    bucket (fine: ``w_node`` one-hot at the node's own bucket; its row sums
+    always equal ``w_node``).
+
+With unit defaults the arithmetic is identical to the plain per-node
+formulas, so fine-level feature matrices are bit-identical to the pre-unit
+extractor. With cluster-aggregated units, every feature of a cluster
+placement equals — bit for bit — the fine feature of the projected placement
+``node_pe = cluster_pe[clusters]`` (intra-cluster edges travel 0 hops, so
+dropping them changes nothing). That exactness is what lets the multilevel
+placer's *coarse* phase consult the surrogate fitted on fine placements
+(:mod:`repro.surrogate.delta`), and it is pinned by tests.
 """
 from __future__ import annotations
 
@@ -42,22 +65,51 @@ from ..place.cost import edge_tables
 DEPTH_BUCKETS = 8
 
 
+def assemble_features(t_w, t_u, t_c, loads, counts, inject, eject,
+                      ring_x, ring_y, lvl):
+    """[F] int64 feature vector from the raw accumulators.
+
+    THE single definition of the feature order — both the batch extractor
+    below and the incremental delta path (:mod:`repro.surrogate.delta`)
+    build their vectors through it, so they cannot drift apart.
+    """
+    return jnp.concatenate([
+        jnp.stack([
+            t_w, t_u, t_c,
+            jnp.sum(loads * loads), loads.max(),
+            jnp.sum(counts * counts), counts.max(),
+            jnp.sum(inject * inject), inject.max(),
+            jnp.sum(eject * eject), eject.max(),
+            jnp.maximum(ring_x.max(), ring_y.max()),
+            jnp.sum(ring_x * ring_x) + jnp.sum(ring_y * ring_y),
+        ]),
+        lvl.max(axis=1),
+        jnp.sum(lvl * lvl, axis=1),
+    ])
+
+
 @dataclasses.dataclass(frozen=True)
 class FeatureExtractor:
     """Static per-graph tables + the vmapped feature function."""
 
     nx: int
     ny: int
-    src: np.ndarray          # [E] int32 edge source node
-    dst: np.ndarray          # [E] int32 edge destination node
-    w_edge: np.ndarray       # [E] int32 criticality edge weight
-    w_node: np.ndarray       # [N] int32 criticality node weight
-    crit_edge: np.ndarray    # [E] bool: edge on the (near-)critical chain
-    depth_bucket: np.ndarray  # [N] int32 ASAP-depth bucket in [0, DEPTH_BUCKETS)
+    src: np.ndarray           # [E] int32 edge source item
+    dst: np.ndarray           # [E] int32 edge destination item
+    w_edge: np.ndarray        # [E] int32 criticality edge weight
+    w_node: np.ndarray        # [N] int32 criticality item weight
+    c_unit: np.ndarray        # [E] int32 critical fine edges represented
+    e_unit: np.ndarray        # [E] int32 fine edges represented (fine: 1)
+    n_unit: np.ndarray        # [N] int32 fine nodes represented (fine: 1)
+    w_bucket: np.ndarray      # [N, DEPTH_BUCKETS] int32 weight per ASAP bucket
 
     @property
     def num_pes(self) -> int:
         return self.nx * self.ny
+
+    @property
+    def num_items(self) -> int:
+        return self.w_node.shape[0]
 
     @property
     def num_features(self) -> int:
@@ -68,10 +120,9 @@ class FeatureExtractor:
         nx, ny, P = self.nx, self.ny, self.num_pes
         src = jnp.asarray(self.src)
         dst = jnp.asarray(self.dst)
-        crit_edge = jnp.asarray(self.crit_edge)
-        db = jnp.asarray(self.depth_bucket)
+        db = jnp.asarray(self.w_bucket)
 
-        def one(pe, w_edge, w_node):
+        def one(pe, w_edge, c_unit, e_unit, w_node, n_unit):
             pe = jnp.asarray(pe, jnp.int32)
             ps, pd = pe[src], pe[dst]
             sx, sy = ps // ny, ps % ny
@@ -82,13 +133,13 @@ class FeatureExtractor:
             remote = (hops > 0).astype(jnp.int64)
 
             t_w = jnp.sum(w_edge * hops)
-            t_u = jnp.sum(hops)
-            t_c = jnp.sum(jnp.where(crit_edge, hops, 0))
+            t_u = jnp.sum(e_unit * hops)
+            t_c = jnp.sum(c_unit * hops)
 
             loads = jnp.zeros(P, jnp.int64).at[pe].add(w_node)
-            counts = jnp.zeros(P, jnp.int64).at[pe].add(1)
-            inject = jnp.zeros(P, jnp.int64).at[ps].add(remote)
-            eject = jnp.zeros(P, jnp.int64).at[pd].add(remote)
+            counts = jnp.zeros(P, jnp.int64).at[pe].add(n_unit)
+            inject = jnp.zeros(P, jnp.int64).at[ps].add(e_unit * remote)
+            eject = jnp.zeros(P, jnp.int64).at[pd].add(e_unit * remote)
 
             # Ring loads: east hops run on the source row (X-ring sy), south
             # hops on the destination column (Y-ring dx) — dimension order.
@@ -96,27 +147,18 @@ class FeatureExtractor:
             ring_y = jnp.zeros(nx, jnp.int64).at[dx].add(w_edge * hy)
 
             # [DEPTH_BUCKETS, P] weighted load per (wavefront level, PE).
-            lvl = jnp.zeros((DEPTH_BUCKETS, P), jnp.int64).at[db, pe].add(w_node)
+            lvl = jnp.zeros((DEPTH_BUCKETS, P), jnp.int64).at[:, pe].add(
+                db.T.astype(jnp.int64))
 
-            return jnp.concatenate([
-                jnp.stack([
-                    t_w, t_u, t_c,
-                    jnp.sum(loads * loads), loads.max(),
-                    jnp.sum(counts * counts), counts.max(),
-                    jnp.sum(inject * inject), inject.max(),
-                    jnp.sum(eject * eject), eject.max(),
-                    jnp.maximum(ring_x.max(), ring_y.max()),
-                    jnp.sum(ring_x * ring_x) + jnp.sum(ring_y * ring_y),
-                ]),
-                lvl.max(axis=1),
-                jnp.sum(lvl * lvl, axis=1),
-            ])
+            return assemble_features(t_w, t_u, t_c, loads, counts, inject,
+                                     eject, ring_x, ring_y, lvl)
 
         @jax.jit
         def batch(pes):
-            w_edge = jnp.asarray(self.w_edge, jnp.int64)
-            w_node = jnp.asarray(self.w_node, jnp.int64)
-            return jax.vmap(lambda p: one(p, w_edge, w_node))(pes)
+            args = [jnp.asarray(a, jnp.int64) for a in
+                    (self.w_edge, self.c_unit, self.e_unit,
+                     self.w_node, self.n_unit)]
+            return jax.vmap(lambda p: one(p, *args))(pes)
 
         return batch
 
@@ -147,6 +189,59 @@ class FeatureExtractor:
             return np.asarray(out).astype(np.float64)
 
 
+def features_from_tables(
+    nx: int,
+    ny: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    w_edge: np.ndarray,
+    w_node: np.ndarray,
+    *,
+    c_unit: np.ndarray | None = None,
+    e_unit: np.ndarray | None = None,
+    n_unit: np.ndarray | None = None,
+    w_bucket: np.ndarray | None = None,
+    depth: np.ndarray | None = None,
+) -> FeatureExtractor:
+    """Build an extractor directly from flat integer scoring tables.
+
+    Defaults reproduce the fine-level (per-graph-node) semantics: unit
+    multiplicities of 1, ``c_unit`` from the top-weight-class rule, and a
+    one-hot ``w_bucket`` from ``depth`` (ASAP levels; all-zero when absent).
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    w_edge = np.asarray(w_edge, dtype=np.int32)
+    w_node = np.asarray(w_node, dtype=np.int32)
+    n = w_node.shape[0]
+    if c_unit is None:
+        # "critical chain": edges carrying the top integer weight class.
+        c_unit = (w_edge >= int(w_edge.max(initial=1))).astype(np.int32)
+    if e_unit is None:
+        e_unit = np.ones_like(w_edge)
+    if n_unit is None:
+        n_unit = np.ones_like(w_node)
+    if w_bucket is None:
+        if depth is None:
+            depth = np.zeros(n, dtype=np.int64)
+        depth = np.asarray(depth, dtype=np.int64)
+        top = max(1, int(depth.max(initial=0)) + 1)
+        bucket = (depth * DEPTH_BUCKETS // top).astype(np.int64)
+        w_bucket = np.zeros((n, DEPTH_BUCKETS), dtype=np.int32)
+        w_bucket[np.arange(n), bucket] = w_node
+    w_bucket = np.asarray(w_bucket, dtype=np.int32)
+    if w_bucket.shape != (n, DEPTH_BUCKETS):
+        raise ValueError(
+            f"w_bucket must be [{n}, {DEPTH_BUCKETS}], got {w_bucket.shape}")
+    return FeatureExtractor(
+        nx=nx, ny=ny, src=src, dst=dst, w_edge=w_edge, w_node=w_node,
+        c_unit=np.asarray(c_unit, dtype=np.int32),
+        e_unit=np.asarray(e_unit, dtype=np.int32),
+        n_unit=np.asarray(n_unit, dtype=np.int32),
+        w_bucket=w_bucket,
+    )
+
+
 def build_features(
     g: DataflowGraph,
     nx: int,
@@ -158,14 +253,57 @@ def build_features(
     """Precompute the static feature tables for ``g`` on an ``nx x ny`` grid."""
     src, dst, w_edge, w_node = edge_tables(g, metric=metric,
                                            crit_scale=crit_scale)
-    depth = asap_levels(g)
-    top = max(1, int(depth.max(initial=0)) + 1)
-    bucket = (depth * DEPTH_BUCKETS // top).astype(np.int32)
+    return features_from_tables(nx, ny, src, dst, w_edge, w_node,
+                                depth=asap_levels(g))
+
+
+def coarsen_extractor(ex: FeatureExtractor,
+                      clusters: np.ndarray) -> FeatureExtractor:
+    """Quotient-graph extractor whose features are EXACTLY the fine ones.
+
+    Aggregates the fine tables over a ``[N] node -> cluster`` map: parallel
+    inter-cluster edges sum their weights and unit multiplicities, cluster
+    weights/units/bucket rows are member sums, and intra-cluster edges are
+    dropped (their hops are 0 wherever the cluster lands, so every feature
+    term they touch is 0 anyway). For any cluster placement ``cpe``::
+
+        coarsen_extractor(ex, clusters).features_batch(cpe)
+            == ex.features_batch(cpe[clusters])        # bit-exact
+
+    Quotient edges are ordered by ``(src_cluster * C + dst_cluster)`` —
+    identical to :func:`repro.place.coarsen.quotient_tables`, so a guide
+    built from this extractor shares the coarse annealer's incidence layout.
+    """
+    clusters = np.asarray(clusters, dtype=np.int64)
+    n = ex.num_items
+    if clusters.shape != (n,):
+        raise ValueError(f"clusters must be [{n}] item->cluster, "
+                         f"got {clusters.shape}")
+    c = int(clusters.max(initial=-1)) + 1
+    csrc, cdst = clusters[ex.src], clusters[ex.dst]
+    cross = csrc != cdst
+    pair = csrc[cross] * c + cdst[cross]
+    uniq, inv = np.unique(pair, return_inverse=True)
+
+    def agg_edge(v):
+        out = np.zeros(len(uniq), dtype=np.int64)
+        np.add.at(out, inv, np.asarray(v, np.int64)[cross])
+        return out.astype(np.int32)
+
+    def agg_node(v):
+        out = np.zeros(c, dtype=np.int64)
+        np.add.at(out, clusters, np.asarray(v, np.int64))
+        return out.astype(np.int32)
+
+    w_bucket = np.zeros((c, DEPTH_BUCKETS), dtype=np.int64)
+    np.add.at(w_bucket, clusters, ex.w_bucket.astype(np.int64))
     return FeatureExtractor(
-        nx=nx, ny=ny,
-        src=src.astype(np.int32), dst=dst.astype(np.int32),
-        w_edge=w_edge.astype(np.int32), w_node=w_node.astype(np.int32),
-        # "critical chain": edges carrying the top integer weight class.
-        crit_edge=w_edge >= int(w_edge.max(initial=1)),
-        depth_bucket=bucket,
+        nx=ex.nx, ny=ex.ny,
+        src=(uniq // c).astype(np.int32), dst=(uniq % c).astype(np.int32),
+        w_edge=agg_edge(ex.w_edge),
+        w_node=agg_node(ex.w_node),
+        c_unit=agg_edge(ex.c_unit),
+        e_unit=agg_edge(ex.e_unit),
+        n_unit=agg_node(ex.n_unit),
+        w_bucket=w_bucket.astype(np.int32),
     )

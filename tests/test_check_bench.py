@@ -1,0 +1,183 @@
+"""benchmarks/check_bench.py — the gate that guards every tracked cycle
+count — exercised directly: exit codes for regressed cycles, vanished rows,
+below-floor Spearman, guided-annealing floor violations, and the
+informational-only treatment of wall-time deltas."""
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_CHECK = (pathlib.Path(__file__).resolve().parents[1]
+          / "benchmarks" / "check_bench.py")
+_spec = importlib.util.spec_from_file_location("check_bench", _CHECK)
+cb = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cb)
+
+
+def _bench():
+    """A minimal snapshot touching every gated section shape."""
+    return {
+        "fig1": [{"name": "fig1_arrow_n100", "wall_s": 1.0,
+                  "cycles_per_sec": 1000.0,
+                  "cycles_ooo": 120, "cycles_inorder": 150}],
+        "policy_sweep": {"schedulers": [
+            {"scheduler": "ooo", "cycles": 120},
+            {"scheduler": "inorder", "cycles": 150}]},
+        "chunking": {"rows": [{"name": "chunking_auto_n100", "wall_s": 0.5,
+                               "cycles": {"ooo": 120}}]},
+        "placement": {"rows": [{"name": "placement_a", "wall_s": 2.0,
+                                "cycles_identity": 100,
+                                "cycles_annealed": 80}]},
+        "eject": {"rows": []},
+        "surrogate": {"rows": [
+            {"name": "surrogate_a", "wall_s": 3.0, "spearman": 0.95,
+             "prune_gap": 1.0, "pruned_best": 80, "exhaustive_best": 80},
+            {"name": "surrogate_multilevel_n100", "wall_s": 4.0,
+             "cycles_round_robin": 140, "cycles_multilevel": 90}]},
+        "guided": {"rows": [
+            {"name": "guided_a", "wall_s": 5.0,
+             "cycles_unguided": 80, "cycles_guided": 75,
+             "cost_evals": 30, "cost_evals_unguided": 100,
+             "eval_ratio": 0.3}]},
+        "fig1_full": {"rows": [
+            {"name": "fig1_full_n470000", "wall_s": 60.0,
+             "cycles_round_robin": 40000, "cycles_multilevel": 25000}]},
+    }
+
+
+def _run(tmp_path, baseline, fresh):
+    b = tmp_path / "baseline.json"
+    f = tmp_path / "fresh.json"
+    b.write_text(json.dumps(baseline))
+    f.write_text(json.dumps(fresh))
+    return cb.main(str(b), str(f))
+
+
+def test_identical_snapshots_pass(tmp_path, capsys):
+    assert _run(tmp_path, _bench(), _bench()) == 0
+    out = capsys.readouterr().out
+    assert "OK" in out and "no regressions" in out
+
+
+def test_cycle_regression_fails(tmp_path, capsys):
+    fresh = _bench()
+    fresh["fig1"][0]["cycles_ooo"] = 121
+    assert _run(tmp_path, _bench(), fresh) == 1
+    assert "cycle-count regression" in capsys.readouterr().out
+
+
+def test_improvement_passes_and_is_reported(tmp_path, capsys):
+    fresh = _bench()
+    fresh["placement"]["rows"][0]["cycles_annealed"] = 70
+    assert _run(tmp_path, _bench(), fresh) == 0
+    assert "BETTER" in capsys.readouterr().out
+
+
+def test_vanished_cycle_row_fails(tmp_path, capsys):
+    fresh = _bench()
+    fresh["placement"]["rows"] = []
+    assert _run(tmp_path, _bench(), fresh) == 1
+    assert "missing from fresh run" in capsys.readouterr().out
+
+
+def test_vanished_fig1_full_row_fails(tmp_path):
+    fresh = _bench()
+    del fresh["fig1_full"]
+    assert _run(tmp_path, _bench(), fresh) == 1
+
+
+def test_new_rows_are_informational(tmp_path, capsys):
+    fresh = _bench()
+    fresh["fig1"].append({"name": "fig1_arrow_n200", "wall_s": 2.0,
+                          "cycles_ooo": 300})
+    assert _run(tmp_path, _bench(), fresh) == 0
+    assert "NEW" in capsys.readouterr().out
+
+
+def test_wall_time_deltas_never_block(tmp_path, capsys):
+    fresh = _bench()
+    for row in (fresh["fig1"] + fresh["placement"]["rows"]
+                + fresh["guided"]["rows"]):
+        row["wall_s"] = 1000.0      # 100x slower: noisy-runner territory
+    fresh["fig1"][0]["cycles_per_sec"] = 1.0
+    assert _run(tmp_path, _bench(), fresh) == 0
+    assert "WALL" in capsys.readouterr().out
+
+
+def test_below_floor_spearman_fails(tmp_path, capsys):
+    fresh = _bench()
+    fresh["surrogate"]["rows"][0]["spearman"] = cb.SPEARMAN_FLOOR - 0.01
+    assert _run(tmp_path, _bench(), fresh) == 1
+    assert "spearman" in capsys.readouterr().out
+
+
+def test_prune_gap_above_max_fails(tmp_path):
+    fresh = _bench()
+    fresh["surrogate"]["rows"][0]["prune_gap"] = cb.PRUNE_GAP_MAX + 0.01
+    assert _run(tmp_path, _bench(), fresh) == 1
+
+
+def test_vanished_quality_row_fails(tmp_path, capsys):
+    # Rank rows carry no cycles_* keys, so only the quality check can
+    # protect them from silently disappearing.
+    fresh = _bench()
+    fresh["surrogate"]["rows"] = [fresh["surrogate"]["rows"][1]]
+    assert _run(tmp_path, _bench(), fresh) == 1
+    assert "quality row missing" in capsys.readouterr().out
+
+
+def test_guided_eval_ratio_above_max_fails(tmp_path, capsys):
+    fresh = _bench()
+    fresh["guided"]["rows"][0].update(
+        eval_ratio=cb.GUIDED_EVAL_RATIO_MAX + 0.01, cost_evals=51)
+    assert _run(tmp_path, _bench(), fresh) == 1
+    assert "cost_evals" in capsys.readouterr().out
+
+
+def test_guided_worse_than_unguided_fails(tmp_path, capsys):
+    fresh = _bench()
+    # Both cycle counts improve on baseline (no plain regression), but the
+    # guided <= unguided relation breaks — must still fail.
+    fresh["guided"]["rows"][0].update(cycles_unguided=70, cycles_guided=74)
+    assert _run(tmp_path, _bench(), fresh) == 1
+    assert "guided" in capsys.readouterr().out
+
+
+def test_guided_relation_checked_even_without_baseline(tmp_path):
+    baseline = _bench()
+    del baseline["guided"]      # first run that introduces the section
+    fresh = _bench()
+    fresh["guided"]["rows"][0].update(cost_evals=90, eval_ratio=0.9)
+    assert _run(tmp_path, baseline, fresh) == 1
+
+
+def test_guided_gate_uses_exact_counters_not_rounded_ratio(tmp_path):
+    # eval_ratio rounds to exactly the max, but the integer counters are a
+    # hairline over — the exact comparison must still fail.
+    fresh = _bench()
+    fresh["guided"]["rows"][0].update(
+        cost_evals=50001, cost_evals_unguided=100000,
+        eval_ratio=cb.GUIDED_EVAL_RATIO_MAX)
+    assert _run(tmp_path, _bench(), fresh) == 1
+    # ... and the display-only fallback still gates rows without counters.
+    fresh2 = _bench()
+    row = fresh2["guided"]["rows"][0]
+    del row["cost_evals"], row["cost_evals_unguided"]
+    row["eval_ratio"] = cb.GUIDED_EVAL_RATIO_MAX + 0.01
+    assert _run(tmp_path, _bench(), fresh2) == 1
+
+
+def test_bad_usage_exit_code():
+    with pytest.raises(FileNotFoundError):
+        cb.main("/nonexistent/a.json", "/nonexistent/b.json")
+
+
+def test_deep_copy_safety():
+    # _bench fixtures must be independent per test (guard the test file
+    # itself against aliasing bugs).
+    a, b = _bench(), _bench()
+    a["fig1"][0]["cycles_ooo"] = 1
+    assert b["fig1"][0]["cycles_ooo"] == 120
+    assert copy.deepcopy(a) == a
