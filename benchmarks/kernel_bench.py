@@ -5,7 +5,7 @@ paper's geometry (256 PEs x 256 flag words == 8 BRAMs' worth of flags) and
 larger, (b) every registered scheduler policy's full ``select`` + ``commit``
 step on randomized scheduler state — the simulator's actual hot spot per
 cycle — and (c) the fused Pallas scheduler kernels (``schedule_step`` and
-the rotating-pointer variant) that ``OverlayConfig(use_pallas=True)`` routes
+the rotating-pointer variant) that ``OverlayConfig(engine="select")`` routes
 the pick through. On this CPU container the Pallas rows run in interpret
 mode (flagged ``interpret: true`` in run.py's JSON snapshot): the timing is
 not physical TPU performance, but it tracks kernel-level regressions per PR
@@ -97,7 +97,7 @@ def run():
                 "derived": round(pes / (us * 1e-6), 0),
             })
 
-    # Fused Pallas scheduler kernels (the use_pallas=True select path).
+    # Fused Pallas scheduler kernels (the engine="select" pick path).
     from repro.kernels import ops
     from repro.kernels.ops import _interpret
 

@@ -61,6 +61,26 @@ def _shard_shift(axis_name: str, axis_idx: int, n: int):
     return shift
 
 
+def _mk_chunk(gl, cfg, K, sched, mk_cycle, all_reduce, nsx, nsy, *, batched):
+    """Per-shard chunk step honoring ``cfg.engine``.
+
+    The megakernel chunk (one fused ``pallas_call`` per K cycles) cannot
+    contain the cross-shard ppermute a sharded torus shift needs, so it only
+    engages when both mesh axes are size 1 — the shifts are then pure local
+    rolls and the shard-local grid IS the global grid (x0 = y0 = 0). Any
+    real multi-shard mesh silently falls back to the jnp chunk, whose
+    once-per-chunk psum/pmin already amortizes the collectives
+    (docs/megakernel.md, "Fallback semantics")."""
+    if cfg.engine == "megakernel" and nsx == 1 and nsy == 1:
+        from ..kernels import megakernel
+
+        return megakernel.make_mega_chunk_fn(
+            gl, cfg, K, scheduler=sched, batched=batched,
+            all_reduce=all_reduce)
+    chunk = overlay.make_chunk_fn(mk_cycle(lambda x: x), K, all_reduce)
+    return jax.vmap(chunk) if batched else chunk
+
+
 def _mk_all_reduce(axis_x: str, axis_y: str):
     def all_reduce(x):
         if x.dtype == jnp.bool_:  # logical AND across shards
@@ -126,11 +146,12 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
         def cond(s):
             return (~s["done"]) & (s["cycle"] < cfg.max_cycles)
 
-        if K > 1:
+        if K > 1 or cfg.engine == "megakernel":
             # Guard-free chunks while a whole chunk fits the budget; the
             # per-cycle engine (with its per-cycle collectives) only runs
             # the < K tail cycles.
-            chunk = overlay.make_chunk_fn(mk_cycle(lambda x: x), K, all_reduce)
+            chunk = _mk_chunk(gl, cfg, K, sched, mk_cycle, all_reduce,
+                              nsx, nsy, batched=False)
             state = jax.lax.while_loop(
                 lambda s: (~s["done"]) & (s["cycle"] + K <= cfg.max_cycles),
                 chunk, state)
@@ -157,7 +178,7 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
 
     One XLA program runs every config of ``cfgs`` (scheduler / select latency
     / cycle budget may vary; ``eject_capacity``, ``eject_policy``,
-    ``use_pallas`` and ``placement`` must be uniform) with the PE grid
+    ``engine`` and ``placement`` must be uniform) with the PE grid
     tiled over ``mesh`` — the batched counterpart
     of :func:`simulate_sharded` for overlays larger than one device, and the
     sharded counterpart of :func:`repro.core.overlay.simulate_batch`. The
@@ -176,10 +197,11 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
     if len(policy) != 1:
         raise ValueError(
             f"simulate_batch_sharded needs a uniform eject_policy, got {policy}")
-    pallas = {c.use_pallas for c in cfgs}
-    if len(pallas) != 1:
+    engines = {c.engine for c in cfgs}
+    if len(engines) != 1:
         raise ValueError(
-            f"simulate_batch_sharded needs a uniform use_pallas, got {pallas}")
+            f"simulate_batch_sharded needs a uniform engine (use_pallas is "
+            f"deprecated sugar for engine='select'), got {engines}")
     placements = {c.placement for c in cfgs}
     if len(placements) != 1:
         raise ValueError(
@@ -254,9 +276,9 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
         def cond(s):
             return ((~s["done"]) & (s["cycle"] < max_cycs)).any()
 
-        if K > 1:
-            vchunk = jax.vmap(
-                overlay.make_chunk_fn(mk_cycle(lambda x: x), K, all_reduce))
+        if K > 1 or base.engine == "megakernel":
+            vchunk = _mk_chunk(gl, base, K, sched, mk_cycle, all_reduce,
+                               nsx, nsy, batched=True)
 
             def chunk_cond(s):
                 running = (~s["done"]) & (s["cycle"] < max_cycs)

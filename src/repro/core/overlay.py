@@ -18,7 +18,7 @@ Scheduling policy is pluggable: the cycle kernel only talks to the
 :class:`repro.core.schedulers.Scheduler` protocol (its fused per-cycle entry
 point is ``step`` — select + latency-gated commit, optionally backed by the
 Pallas kernels in :mod:`repro.kernels.lod` via
-``OverlayConfig(use_pallas=True)``), and the policy's state lives in the
+``OverlayConfig(engine="select")``), and the policy's state lives in the
 ``"sched"`` sub-dict of the simulation state pytree. See
 :mod:`repro.core.schedulers` for the registered policies (``ooo``,
 ``inorder``, ``scan``, ``lru_flat``) and how to add one.
@@ -36,6 +36,10 @@ Hot-path engineering (engine-level, never observable in results):
     the cycle body, so the exact completion cycle is recovered from the
     chunk's per-cycle done trace (see :func:`make_chunk_fn`); results are
     bit-identical for every ``check_every``.
+  * *Megakernel chunks* (``OverlayConfig(engine="megakernel")``): the whole
+    chunk fuses into ONE ``pallas_call`` with state carried across its K
+    cycles in kernel refs (:mod:`repro.kernels.megakernel`); the jnp scan
+    above stays the bit-exact reference oracle.
 
 Three execution engines share the same cycle body:
   * :func:`simulate`          — single device, one config;
@@ -50,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
@@ -62,6 +67,9 @@ from .partition import GraphMemory
 from .schedulers import row_gather as _row_gather
 
 Shift = Callable[[dict], dict]
+
+#: Chunk execution engines (cycle-exact by construction, see OverlayConfig).
+ENGINES = ("jnp", "select", "megakernel")
 
 
 def alu(opcode, a, b):
@@ -96,10 +104,24 @@ class OverlayConfig:
     the graph size (8–32); ``1`` forces the legacy cycle-by-cycle reference
     engine.
 
-    ``use_pallas`` routes the scheduler pick through the fused Pallas LOD
-    kernels in :mod:`repro.kernels.lod` (one VMEM round-trip per pick) for
-    policies that support it; off by default so CPU CI runs the pure-jnp
-    reference path. On non-TPU backends the kernels run in interpret mode.
+    ``engine`` picks how a chunk of cycles executes — never *what* it
+    computes (all three engines are bit-identical, asserted in tests):
+
+      * ``"jnp"`` (default) — the pure-jnp reference path: one ``lax.scan``
+        of the cycle body per chunk;
+      * ``"select"`` — the jnp cycle body with the scheduler pick routed
+        through the fused Pallas kernels in :mod:`repro.kernels.lod` (one
+        VMEM round-trip per pick), for policies that support it;
+      * ``"megakernel"`` — the whole ``check_every``-cycle chunk fused into
+        ONE ``pallas_call`` (:mod:`repro.kernels.megakernel`): select +
+        Hoplite route + fused eject + termination counter with state
+        carried across cycles in kernel refs. Sharded engines fall back to
+        ``"jnp"`` chunks whenever a mesh axis is >1 (collectives cannot
+        live inside a kernel — see docs/megakernel.md).
+
+    On non-TPU backends the Pallas engines run in interpret mode.
+    ``use_pallas=True`` is the deprecated spelling of ``engine="select"``
+    and is shimmed with a warning; when both are given, ``engine`` wins.
 
     ``eject_policy`` picks the NoC's single-port eject arbitration:
     ``"n_first"`` (Hoplite's N-beats-W default) or ``"priority"`` (the
@@ -119,11 +141,21 @@ class OverlayConfig:
     eject_capacity: int = 1          # 2 == paper §II-C BRAM multipumping
     max_cycles: int = 1_000_000
     check_every: int | None = None   # cycles per termination check; None=auto
-    use_pallas: bool = False         # fused Pallas select/commit kernels
+    use_pallas: bool = False         # DEPRECATED: alias for engine="select"
     eject_policy: str = "n_first"    # NoC eject arbitration (see noc.py)
     placement: Any = None            # PlacementSpec | strategy name | None
+    engine: str = "jnp"              # "jnp" | "select" | "megakernel"
 
     def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"engine must be one of {sorted(ENGINES)}, got {self.engine!r}")
+        if self.use_pallas and self.engine == "jnp":
+            warnings.warn(
+                "OverlayConfig(use_pallas=True) is deprecated; use "
+                "engine='select' (or engine='megakernel' for the fully "
+                "fused chunk engine)", DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "engine", "select")
         if self.select_latency is not None and self.select_latency < 1:
             raise ValueError(
                 f"select_latency must be >= 1 exposed cycle (or None for the "
@@ -151,14 +183,19 @@ def resolve_check_every(cfg: OverlayConfig, nx: int, ny: int, L: int, *,
     the autotune only trades per-chunk overhead against wasted tail cycles
     (up to K-1 extra cycle evaluations after completion).
 
-    Keyed on graph size AND execution target:
+    Keyed on graph size AND execution target AND engine path:
       * single-device CPU — grows with the slot count (bigger graphs run
         long enough to amortize deep chunks): 8 / 16 / 32;
       * multi-device mesh (``num_devices > 1``) — the chunk also amortizes
         the per-check cross-shard psum/pmin, which dominates regardless of
         graph size (~1.5x on an 8-device CPU mesh): always 32;
       * single-device TPU — the compiled chunk body is cheap relative to the
-        host-visible while_loop predicate sync: at least 16.
+        host-visible while_loop predicate sync: at least 16;
+      * ``engine="megakernel"`` — one kernel dispatch per chunk, so the
+        launch amortizes with depth regardless of graph size: always 32;
+      * ``engine="select"`` — one Pallas select dispatch per *cycle*; a
+        deeper chunk keeps more of them inside one while-loop iteration:
+        at least 16.
 
     ``backend`` defaults to ``jax.default_backend()`` at trace time.
     """
@@ -166,8 +203,12 @@ def resolve_check_every(cfg: OverlayConfig, nx: int, ny: int, L: int, *,
         return cfg.check_every
     if num_devices > 1:
         return 32
+    if cfg.engine == "megakernel":
+        return 32
     slots = nx * ny * L
     base = 8 if slots <= 4_096 else (16 if slots <= 65_536 else 32)
+    if cfg.engine == "select":
+        base = max(base, 16)
     backend = backend or jax.default_backend()
     if backend == "tpu":
         return max(base, 16)
@@ -346,7 +387,7 @@ def make_cycle_fn(
         idle = active < 0
         gate = idle & (sel_wait == 0)
         cand, have, sched_st = sched.step(sched_st, idle, gate,
-                                          use_pallas=cfg.use_pallas)
+                                          use_pallas=cfg.engine == "select")
         can_wait = idle & have & (sel_wait > 0)
         sel_wait = jnp.where(can_wait, sel_wait - 1, sel_wait)
         sel = gate & have
@@ -440,6 +481,29 @@ def make_chunk_fn(cycle_fn, check_every: int,
     return chunk
 
 
+def make_engine_chunk_fn(g: DeviceGraph, cfg: OverlayConfig, check_every: int,
+                         *, scheduler: schedulers.Scheduler | None = None,
+                         batched: bool = False,
+                         all_reduce: Callable[[Any], Any] = lambda x: x,
+                         cycle_fn=None):
+    """Chunk step for ``cfg.engine`` — the dispatch point every execution
+    engine routes through. ``"megakernel"`` builds the fused single-
+    ``pallas_call`` chunk (:mod:`repro.kernels.megakernel`); ``"jnp"`` and
+    ``"select"`` scan ``cycle_fn`` (built here when not supplied). With
+    ``batched=True`` the returned chunk operates on a stacked config axis
+    (the jnp path vmaps; the megakernel vmaps its in-kernel cycle body)."""
+    if cfg.engine == "megakernel":
+        from ..kernels import megakernel  # lazy: kernels layer is optional
+
+        return megakernel.make_mega_chunk_fn(
+            g, cfg, check_every, scheduler=scheduler, batched=batched,
+            all_reduce=all_reduce)
+    if cycle_fn is None:
+        cycle_fn = make_cycle_fn(g, cfg, scheduler=scheduler)
+    chunk = make_chunk_fn(cycle_fn, check_every, all_reduce)
+    return jax.vmap(chunk) if batched else chunk
+
+
 @dataclasses.dataclass
 class SimResult:
     cycles: int
@@ -459,11 +523,13 @@ def _run_jit(g: dict, cfg: OverlayConfig, nx: int, ny: int):
     def cond(s):
         return (~s["done"]) & (s["cycle"] < cfg.max_cycles)
 
-    if K > 1:
+    if K > 1 or cfg.engine == "megakernel":
         # Chunked phase: K back-to-back cycles per termination check, entered
         # only while a full chunk fits the budget (so no freeze guard is
         # needed inside); the per-cycle loop below finishes the < K tail.
-        chunk = make_chunk_fn(cycle_fn, K)
+        # The megakernel engine chunks even at K=1 so a check_every=1 run
+        # still exercises (and is bit-pinned against) the fused kernel.
+        chunk = make_engine_chunk_fn(g, cfg, K, cycle_fn=cycle_fn)
         state = jax.lax.while_loop(
             lambda s: (~s["done"]) & (s["cycle"] + K <= cfg.max_cycles),
             chunk, state)
@@ -556,13 +622,14 @@ def _run_batch_jit(g: dict, cfg: OverlayConfig, names: tuple[str, ...],
         # are exactly what a solo run with the same config would report.
         return jax.tree.map(freeze, s, new)
 
-    if K > 1:
+    if K > 1 or cfg.engine == "megakernel":
         # Chunked phase, vmapped whole: guard-free K-cycle chunks run while
         # every still-running element has a full chunk of budget left
         # (completed elements are fixed points and get their cycle counter
         # repaired from their own done trace — see make_chunk_fn); the
         # per-cycle freeze body then finishes the heterogeneous tail.
-        vchunk = jax.vmap(make_chunk_fn(cycle_fn, K))
+        vchunk = make_engine_chunk_fn(g, cfg, K, scheduler=sched,
+                                      batched=True, cycle_fn=cycle_fn)
 
         def chunk_cond(s):
             running = (~s["done"]) & (s["cycle"] < max_cycs)
@@ -589,7 +656,7 @@ def simulate_batch(gm: GraphMemory | DataflowGraph,
     finish — or exhaust their own ``max_cycles`` — freeze in place, so every
     returned result is identical to a serial :func:`simulate` call with the
     same config. Requirements: all configs share ``eject_capacity``,
-    ``eject_policy``, ``use_pallas``, and ``placement`` (they change the
+    ``eject_policy``, ``engine``, and ``placement`` (they change the
     traced structure / the packed memory image).
 
     A raw :class:`~repro.core.graph.DataflowGraph` (plus ``nx``/``ny``) is
@@ -604,9 +671,11 @@ def simulate_batch(gm: GraphMemory | DataflowGraph,
     policy = {c.eject_policy for c in cfgs}
     if len(policy) != 1:
         raise ValueError(f"simulate_batch needs a uniform eject_policy, got {policy}")
-    pallas = {c.use_pallas for c in cfgs}
-    if len(pallas) != 1:
-        raise ValueError(f"simulate_batch needs a uniform use_pallas, got {pallas}")
+    engines = {c.engine for c in cfgs}
+    if len(engines) != 1:
+        raise ValueError(
+            f"simulate_batch needs a uniform engine (use_pallas is "
+            f"deprecated sugar for engine='select'), got {engines}")
     placements = {c.placement for c in cfgs}
     if len(placements) != 1:
         raise ValueError(

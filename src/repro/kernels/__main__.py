@@ -1,0 +1,85 @@
+"""Interpret-mode megakernel smoke: ``python -m repro.kernels --smoke``.
+
+Fast end-to-end gate on the fused chunk engine (CI tier-1): for every
+registered scheduler policy the megakernel run must be bit-identical to the
+pure-jnp reference (stats AND node values), the fused chunk must lower to
+exactly one ``pallas_call`` dispatch region, and one fig1-family graph
+(served from the on-disk graph cache CI pre-warms — see
+``workloads.warm_cache``) must reproduce its tracked cycle counts under
+``engine="megakernel"``. Exits non-zero on any mismatch.
+
+``--fig1`` alone skips the tiny-graph matrix and runs only the cached
+fig1-family check (useful for cache debugging).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _stats(r):
+    return (r.done, r.cycles, r.deflections, r.busy_cycles, r.delivered)
+
+
+def smoke(fig1_only: bool = False) -> None:
+    import numpy as np
+
+    from repro.core import schedulers
+    from repro.core import workloads as wl
+    from repro.core.overlay import (OverlayConfig, device_graph, init_state,
+                                    make_engine_chunk_fn, simulate)
+    from repro.core.partition import build_graph_memory
+
+    if not fig1_only:
+        g = wl.layered_dag(4, 6, seed=3)
+        for sched in sorted(schedulers.REGISTRY):
+            gm = build_graph_memory(
+                g, 2, 2,
+                criticality_order=schedulers.get(sched).wants_criticality_order)
+            ref = simulate(gm, OverlayConfig(scheduler=sched, check_every=1))
+            r = simulate(gm, OverlayConfig(scheduler=sched, check_every=8,
+                                           engine="megakernel"))
+            assert _stats(r) == _stats(ref), (sched, _stats(r), _stats(ref))
+            np.testing.assert_array_equal(r.values, ref.values)
+
+            import jax
+
+            cfg = OverlayConfig(scheduler=sched, engine="megakernel")
+            dg = device_graph(gm)
+            chunk = make_engine_chunk_fn(dg, cfg, 8)
+            prims = [eqn.primitive.name
+                     for eqn in jax.make_jaxpr(chunk)(init_state(dg, cfg)).jaxpr.eqns]
+            assert prims.count("pallas_call") == 1, (sched, prims)
+            assert "scan" not in prims, (sched, prims)
+            print(f"megakernel_smoke_{sched},0.0,{r.cycles}")
+
+    # One fig1-family row from the graph cache: the same graph the BENCH
+    # megakernel section hot-times, here only checked for cycle equality.
+    name = wl.MEGAKERNEL_BENCH_GRAPHS[0]
+    g = wl.cached_graph(name, lambda: wl.arrow_lu_graph(4, 10, 8, seed=3))
+    for sched in ("ooo", "inorder"):
+        gm = build_graph_memory(
+            g, 16, 16,
+            criticality_order=schedulers.get(sched).wants_criticality_order)
+        t0 = time.time()
+        ref = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000))
+        r = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000,
+                                       engine="megakernel"))
+        assert r.done and _stats(r) == _stats(ref), (sched, _stats(r),
+                                                     _stats(ref))
+        np.testing.assert_array_equal(r.values, ref.values)
+        print(f"megakernel_smoke_fig1_{sched},"
+              f"{round(1e6 * (time.time() - t0), 1)},{r.cycles}")
+    print("MEGAKERNEL_SMOKE_OK")
+
+
+def main(argv: list[str]) -> int:
+    if "--smoke" in argv or "--fig1" in argv:
+        smoke(fig1_only="--smoke" not in argv)
+        return 0
+    print(__doc__)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,179 @@
+"""Megakernel chunk engine (``OverlayConfig(engine="megakernel")``):
+interpret-mode oracle tests against the pure-jnp reference for every
+registered policy x chunk depth x execution engine, the single-dispatch
+lowering guarantee, the engine-aware ``check_every`` autotune, and the
+``use_pallas`` -> ``engine`` deprecation shim.
+
+The megakernel's correctness argument is that its in-kernel body is the
+*same* cycle function the reference engine scans, carried across the chunk
+in kernel refs, with the identical done-trace repair applied to the kernel
+outputs — so every cycle count, stat counter, and node value must reproduce
+bit-for-bit (no tolerance anywhere in this file).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import schedulers
+from repro.core import workloads as wl
+from repro.core.overlay import (OverlayConfig, resolve_check_every, simulate,
+                                simulate_batch)
+from repro.core.partition import build_graph_memory
+
+ALL_POLICIES = sorted(schedulers.REGISTRY)
+CHECK_EVERYS = (1, 8, 32)
+
+
+def _gm(sched, nx=2, ny=2):
+    g = wl.layered_dag(4, 6, seed=3)
+    policy = schedulers.get(sched)
+    return build_graph_memory(g, nx, ny,
+                              criticality_order=policy.wants_criticality_order)
+
+
+def _stats(r):
+    return (r.done, r.cycles, r.deflections, r.busy_cycles, r.delivered)
+
+
+@pytest.fixture(scope="module")
+def reference_runs():
+    """check_every=1 pure-jnp reference result per policy."""
+    out = {}
+    for sched in ALL_POLICIES:
+        out[sched] = simulate(_gm(sched), OverlayConfig(
+            scheduler=sched, max_cycles=100_000, check_every=1))
+        assert out[sched].done
+    return out
+
+
+@pytest.mark.parametrize("check_every", CHECK_EVERYS)
+@pytest.mark.parametrize("sched", ALL_POLICIES)
+def test_megakernel_bit_identical(sched, check_every, reference_runs):
+    r = simulate(_gm(sched), OverlayConfig(
+        scheduler=sched, max_cycles=100_000, check_every=check_every,
+        engine="megakernel"))
+    ref = reference_runs[sched]
+    assert _stats(r) == _stats(ref), (sched, check_every)
+    np.testing.assert_array_equal(r.values, ref.values)
+
+
+@pytest.mark.parametrize("check_every", CHECK_EVERYS)
+def test_megakernel_batched_bit_identical(check_every):
+    g = wl.layered_dag(4, 6, seed=3)
+    gm = build_graph_memory(g, 2, 2, criticality_order=True)
+    cfgs = [OverlayConfig(scheduler=p, max_cycles=100_000,
+                          check_every=check_every, engine="megakernel")
+            for p in ALL_POLICIES]
+    # heterogeneous budget: freezes mid-chunk at its OWN max_cycles
+    cfgs.append(OverlayConfig(scheduler="scan", max_cycles=20,
+                              check_every=check_every, engine="megakernel"))
+    for cfg, rb in zip(cfgs, simulate_batch(gm, cfgs)):
+        rs = simulate(gm, OverlayConfig(
+            scheduler=cfg.scheduler, max_cycles=cfg.max_cycles, check_every=1))
+        assert _stats(rb) == _stats(rs), (cfg.scheduler, check_every)
+        np.testing.assert_array_equal(rb.values, rs.values)
+
+
+def test_megakernel_sharded_bit_identical():
+    import jax
+
+    from repro.core.distributed import simulate_batch_sharded, simulate_sharded
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    g = wl.layered_dag(4, 6, seed=3)
+    gm = build_graph_memory(g, 2, 2, criticality_order=True)
+    ref = simulate(gm, OverlayConfig(scheduler="ooo", max_cycles=100_000,
+                                     check_every=1))
+    r = simulate_sharded(gm, mesh, OverlayConfig(
+        scheduler="ooo", max_cycles=100_000, check_every=8,
+        engine="megakernel"))
+    assert _stats(r) == _stats(ref)
+    np.testing.assert_array_equal(r.values, ref.values)
+    cfgs = [OverlayConfig(scheduler=p, max_cycles=100_000, engine="megakernel")
+            for p in ("ooo", "scan")]
+    for cfg, rb in zip(cfgs, simulate_batch_sharded(gm, mesh, cfgs)):
+        rs = simulate(gm, OverlayConfig(scheduler=cfg.scheduler,
+                                        max_cycles=100_000, check_every=1))
+        assert _stats(rb) == _stats(rs), cfg.scheduler
+        np.testing.assert_array_equal(rb.values, rs.values)
+
+
+def _top_level_primitives(fn, *args):
+    import jax
+
+    return [eqn.primitive.name for eqn in jax.make_jaxpr(fn)(*args).jaxpr.eqns]
+
+
+@pytest.mark.parametrize("sched", ALL_POLICIES)
+def test_megakernel_chunk_is_single_pallas_call(sched):
+    # The fused chunk must lower to exactly ONE pallas_call dispatch region:
+    # no lax.scan of per-cycle dispatches, no second kernel for the
+    # scheduler select — the whole K-cycle carry lives inside the kernel.
+    from repro.core.overlay import device_graph, init_state, make_engine_chunk_fn
+
+    cfg = OverlayConfig(scheduler=sched, engine="megakernel")
+    g = device_graph(_gm(sched))
+    state = init_state(g, cfg)
+    chunk = make_engine_chunk_fn(g, cfg, 8)
+    prims = _top_level_primitives(chunk, state)
+    assert prims.count("pallas_call") == 1, prims
+    assert "scan" not in prims and "while" not in prims, prims
+
+
+def test_jnp_chunk_is_not_fused():
+    # Contrast case: the reference engine's chunk really is a scanned body —
+    # proof the single-dispatch assertion above is measuring fusion, not a
+    # vacuous property of the tracer.
+    from repro.core.overlay import device_graph, init_state, make_engine_chunk_fn
+
+    cfg = OverlayConfig(scheduler="ooo")
+    g = device_graph(_gm("ooo"))
+    state = init_state(g, cfg)
+    prims = _top_level_primitives(make_engine_chunk_fn(g, cfg, 8), state)
+    assert "scan" in prims
+    assert "pallas_call" not in prims
+
+
+def test_resolve_check_every_keys_on_engine():
+    # Small graph on CPU: jnp autotunes shallow, the select engine at least
+    # 16 (one Pallas dispatch per cycle), the megakernel always 32 (one
+    # kernel launch per chunk amortizes with depth).
+    nx = ny = 2
+    L = 32
+    kw = dict(backend="cpu", num_devices=1)
+    assert resolve_check_every(OverlayConfig(), nx, ny, L, **kw) == 8
+    assert resolve_check_every(
+        OverlayConfig(engine="select"), nx, ny, L, **kw) == 16
+    assert resolve_check_every(
+        OverlayConfig(engine="megakernel"), nx, ny, L, **kw) == 32
+    # explicit check_every always wins over the engine keying
+    assert resolve_check_every(
+        OverlayConfig(engine="megakernel", check_every=4), nx, ny, L, **kw) == 4
+    # multi-device keying unchanged
+    assert resolve_check_every(OverlayConfig(), nx, ny, L, backend="cpu",
+                               num_devices=8) == 32
+
+
+def test_use_pallas_deprecation_shim():
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cfg = OverlayConfig(use_pallas=True)
+    assert cfg.engine == "select"
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    # the modern spelling does not warn
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        OverlayConfig(engine="select")
+        OverlayConfig(engine="megakernel")
+    assert not caught
+    with pytest.raises(ValueError, match="engine"):
+        OverlayConfig(engine="turbo")
+
+
+def test_simulate_batch_rejects_mixed_engine():
+    g = wl.reduction_tree(16)
+    gm = build_graph_memory(g, 2, 2)
+    with pytest.raises(ValueError, match="engine"):
+        simulate_batch(gm, [OverlayConfig(engine="jnp"),
+                            OverlayConfig(engine="megakernel")])
