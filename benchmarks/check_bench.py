@@ -20,6 +20,11 @@ deterministic integers (the guided annealer's accept rule is fully
 quantized): full-cost evaluations <= GUIDED_EVAL_RATIO_MAX of the unguided
 budget, and guided simulated cycles <= unguided simulated cycles.
 
+The ``telemetry`` section's ``ctr_*`` counters (stall attribution,
+deflection split, busiest-link cycles) are gated *bit-exact in both
+directions*: the instrument's output on a deterministic workload must not
+move at all unless the committed snapshot is updated deliberately.
+
 Usage:  python benchmarks/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
@@ -46,11 +51,12 @@ def _cycle_counts(bench: dict) -> dict[str, int]:
     # sections carry per-row cycles_* keys like fig1 does (identity/random/
     # annealed placements; n_first/priority arbitration; multilevel and
     # guided searches; the fig1-full tracked row; the fused-chunk engine's
-    # bit-exactness rows) — all deterministic simulation semantics, all
+    # bit-exactness rows; the telemetry-on runs, whose cycles must equal the
+    # untraced baseline) — all deterministic simulation semantics, all
     # blocking. (jnp_cycles_per_sec / cycles_per_sec are throughput and stay
     # informational: only the cycles_ prefix is gated.)
     for section in ("placement", "eject", "surrogate", "guided", "fig1_full",
-                    "megakernel"):
+                    "megakernel", "telemetry"):
         flat_rows += bench.get(section, {}).get("rows", [])
     for row in flat_rows:
         for key, val in row.items():
@@ -124,11 +130,42 @@ def _guided_quality(fresh: dict) -> list[str]:
     return bad
 
 
+def _telemetry_counters(baseline: dict, fresh: dict) -> list[str]:
+    """Blocking instrument drift in the ``telemetry`` section.
+
+    ``ctr_*`` keys are the telemetry traces reduced to scalars (stall
+    attribution, deflection split, busiest-link cycles, pick counts) for a
+    deterministic workload — the instrument's own output. Unlike cycle
+    counts, *any* change (up or down) is a failure: a counter that moved
+    without the simulation moving means the instrument drifted, which is a
+    semantics bug even if it looks like an "improvement". Changing counter
+    definitions deliberately requires updating the committed snapshot.
+    """
+    bad = []
+    fresh_rows = {row["name"]: row
+                  for row in fresh.get("telemetry", {}).get("rows", [])}
+    for row in baseline.get("telemetry", {}).get("rows", []):
+        new = fresh_rows.get(row["name"])
+        for key, base in sorted(row.items()):
+            if not key.startswith("ctr_"):
+                continue
+            if new is None:
+                bad.append(f"{row['name']}: telemetry row missing from "
+                           f"fresh run")
+                break
+            if key not in new:
+                bad.append(f"{row['name']}.{key}: missing (was {base})")
+            elif int(new[key]) != int(base):
+                bad.append(f"{row['name']}.{key}: {base} -> {new[key]} "
+                           f"(counters must match bit-exactly)")
+    return bad
+
+
 def _wall_times(bench: dict) -> dict[str, float]:
     out: dict[str, float] = {}
     rows = list(bench.get("fig1", []))
     for section in ("placement", "eject", "surrogate", "guided", "fig1_full",
-                    "megakernel"):
+                    "megakernel", "telemetry"):
         rows += bench.get(section, {}).get("rows", [])
     for row in rows:
         out[f"{row['name']}.wall_s"] = float(row["wall_s"])
@@ -172,7 +209,8 @@ def main(baseline_path: str, fresh_path: str) -> int:
 
     quality = _surrogate_quality(baseline, fresh)
     guided = _guided_quality(fresh)
-    failures = regressions + quality + guided
+    telem = _telemetry_counters(baseline, fresh)
+    failures = regressions + quality + guided + telem
     if failures:
         if regressions:
             print(f"\nFAIL: {len(regressions)} cycle-count regression(s):")
@@ -187,6 +225,10 @@ def main(baseline_path: str, fresh_path: str) -> int:
             print(f"\nFAIL: {len(guided)} guided-annealing floor "
                   f"violation(s):")
             for line in guided:
+                print(f"  {line}")
+        if telem:
+            print(f"\nFAIL: {len(telem)} telemetry counter drift(s):")
+            for line in telem:
                 print(f"  {line}")
         return 1
     print(f"\nOK: {len(base_cyc)} tracked cycle counts, no regressions.")

@@ -14,6 +14,9 @@
               placements (CI-gated cycles) + priority eject arbitration
   guided    — surrogate-guided annealing vs the plain annealer: cycles and
               exact full-cost-evaluation counters (CI-gated)
+  telemetry — fig1 ooo-vs-inorder with repro.telemetry tracing on: cycles
+              unchanged vs untraced (CI-gated), instrument counters
+              bit-exact (CI-gated), tracing overhead informational
   fig1_full — (--full only) budgeted multilevel placement + simulation of
               the ~470K-node paper-scale LU DAG (CI-gated cycles)
   roofline  — per (arch x shape) roofline terms from the dry-run artifacts
@@ -118,6 +121,16 @@ def main() -> None:
     # guided <= unguided relation).
     bench["guided"] = {"rows": placement_bench.run_guided()}
     for r in bench["guided"]["rows"]:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
+    # Telemetry instrument: fig1 ooo-vs-inorder with tracing on. Cycle
+    # counts must equal the untraced run (asserted in the bench, gated like
+    # every cycles_* key); the ctr_* counter values (stall attribution,
+    # deflection split, busiest link) are bit-exact gated by check_bench;
+    # the derived column (traced/untraced hot-wall ratio) is informational.
+    from benchmarks import telemetry_bench
+    bench["telemetry"] = {"rows": telemetry_bench.run()}
+    for r in bench["telemetry"]["rows"]:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
     if full:

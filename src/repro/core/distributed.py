@@ -81,6 +81,22 @@ def _mk_chunk(gl, cfg, K, sched, mk_cycle, all_reduce, nsx, nsy, *, batched):
     return jax.vmap(chunk) if batched else chunk
 
 
+def _gather_telem(telem: dict, axis_x: str, axis_y: str) -> dict:
+    """Reassemble shard-local telemetry traces into the global PE grid.
+
+    Every telemetry leaf keeps its grid dims as the LAST TWO axes (bucketed
+    traces are [NB, nx, ny], per-PE totals [nx, ny]; the batched engine adds
+    a leading config axis), so one tiled all_gather per mesh axis rebuilds
+    the replicated global trace — accumulation is purely PE-local, hence the
+    gathered result is bit-identical to a single-device run."""
+
+    def gather(leaf):
+        leaf = jax.lax.all_gather(leaf, axis_y, axis=leaf.ndim - 1, tiled=True)
+        return jax.lax.all_gather(leaf, axis_x, axis=leaf.ndim - 2, tiled=True)
+
+    return {k: gather(v) for k, v in telem.items()}
+
+
 def _mk_all_reduce(axis_x: str, axis_y: str):
     def all_reduce(x):
         if x.dtype == jnp.bool_:  # logical AND across shards
@@ -161,14 +177,15 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
             "value": jax.lax.all_gather(final["value"], axis_y, axis=1, tiled=True),
             "cycle": final["cycle"],
             "done": final["done"],
-            "delivered": final["delivered"],
-            "deflections": final["deflections"],
-            "busy_cycles": final["busy_cycles"],
         }
+        for k in overlay.stat_keys(final):
+            out[k] = final[k]
         out["value"] = jax.lax.all_gather(out["value"], axis_x, axis=0, tiled=True)
+        if "telem" in final:
+            out["telem"] = _gather_telem(final["telem"], axis_x, axis_y)
         return out
 
-    return overlay._unpack_result(run(dict(g)), gm)
+    return overlay._unpack_result(run(dict(g)), gm, cfg=cfg)
 
 
 def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
@@ -178,7 +195,8 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
 
     One XLA program runs every config of ``cfgs`` (scheduler / select latency
     / cycle budget may vary; ``eject_capacity``, ``eject_policy``,
-    ``engine`` and ``placement`` must be uniform) with the PE grid
+    ``engine``, ``placement`` and ``telemetry`` must be uniform) with the
+    PE grid
     tiled over ``mesh`` — the batched counterpart
     of :func:`simulate_sharded` for overlays larger than one device, and the
     sharded counterpart of :func:`repro.core.overlay.simulate_batch`. The
@@ -206,6 +224,11 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
     if len(placements) != 1:
         raise ValueError(
             f"simulate_batch_sharded needs a uniform placement, got {placements}")
+    telems = {c.telemetry for c in cfgs}
+    if len(telems) != 1:
+        raise ValueError(
+            f"simulate_batch_sharded needs a uniform telemetry spec (it "
+            f"shapes the traced state), got {telems}")
     if not isinstance(gm, GraphMemory):
         # Shared packed memory image: see overlay.simulate_batch.
         wants = {schedulers.get(c.scheduler).wants_criticality_order
@@ -303,14 +326,17 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
 
         final = jax.lax.while_loop(cond, freeze_body, state)
         value = jax.lax.all_gather(final["value"], axis_y, axis=2, tiled=True)
-        return {
+        out = {
             "value": jax.lax.all_gather(value, axis_x, axis=1, tiled=True),
             "cycle": final["cycle"],
             "done": final["done"],
-            "delivered": final["delivered"],
-            "deflections": final["deflections"],
-            "busy_cycles": final["busy_cycles"],
         }
+        for k in overlay.stat_keys(final):
+            out[k] = final[k]
+        if "telem" in final:
+            out["telem"] = _gather_telem(final["telem"], axis_x, axis_y)
+        return out
 
     final = run(dict(g), policy_ids, sel_lats, max_cycs)
-    return [overlay._unpack_result(final, gm, b) for b in range(len(cfgs))]
+    return [overlay._unpack_result(final, gm, b, cfg=base)
+            for b in range(len(cfgs))]

@@ -76,9 +76,16 @@ def router_cycle(link_e, link_s, inject, *, shift_e=roll_shift_e, shift_s=roll_s
 
     Returns:
       (new_link_e, new_link_s, ejects [list of packet dicts], accepted,
-       deflected) — ``deflected`` is the [nx, ny] int32 count of in-flight
-      packets this router deflected (kept circulating after losing
-      arbitration) this cycle.
+       deflected) — ``deflected`` is a dict of [nx, ny] int32 per-router
+      counts of in-flight packets this router deflected (kept circulating
+      after losing arbitration) this cycle, split by cause:
+        * ``"noc"``   — route contention away from the destination: a W
+          packet that wanted the S turn but lost it to a continuing N packet;
+        * ``"eject"`` — eject-port contention AT the destination: a packet
+          that reached its target router but lost the single eject port and
+          must come around the ring again.
+      The split feeds the ``noc_deflections`` / ``eject_deflections`` stats
+      and the per-link telemetry traces (:mod:`repro.telemetry`).
     """
     nx, ny = link_e["valid"].shape
     my_x = jnp.arange(nx, dtype=jnp.int32)[:, None] + x0
@@ -122,9 +129,10 @@ def router_cycle(link_e, link_s, inject, *, shift_e=roll_shift_e, shift_s=roll_s
     # --- E output: W continues east, or deflects E on any lost arbitration ---
     w_takes_e = wants_e(w_in) | (wants_s(w_in) & n_takes_s) | (at_dst(w_in) & ~w_ej)
 
-    deflected = ((wants_s(w_in) & n_takes_s).astype(jnp.int32)
-                 + (w_at & ~w_ej).astype(jnp.int32)
-                 + (n_at & ~n_ej).astype(jnp.int32))
+    deflected = dict(
+        noc=(wants_s(w_in) & n_takes_s).astype(jnp.int32),
+        eject=((w_at & ~w_ej).astype(jnp.int32)
+               + (n_at & ~n_ej).astype(jnp.int32)))
 
     # --- PE injection (lowest priority) ---
     inj_local = at_dst(inject)

@@ -134,6 +134,17 @@ class OverlayConfig:
     identity — the partitioner's default round-robin, bit-identical to the
     pre-placement-subsystem engine). Ignored when the caller passes an
     already-packed :class:`GraphMemory`.
+
+    ``telemetry`` opts into the in-engine trace layer (a
+    :class:`repro.telemetry.TelemetrySpec` or ``None`` = off, the default):
+    cycle-resolved (bucketed) integer traces of per-PE occupancy, per-link
+    Hoplite utilization and deflections, eject-port contention, scheduler
+    ready-set depth / pick position, and wavefront progress, accumulated
+    *inside* the jitted cycle loop under ``state["telem"]``. Telemetry is an
+    observer, never a model knob: simulated cycles and stats are bit-
+    identical with it on or off, and with ``telemetry=None`` the traced
+    program is exactly today's (no extra state, no extra ops). See
+    :mod:`repro.telemetry` and docs/telemetry.md.
     """
 
     scheduler: str = "ooo"           # any name in schedulers.REGISTRY
@@ -145,6 +156,7 @@ class OverlayConfig:
     eject_policy: str = "n_first"    # NoC eject arbitration (see noc.py)
     placement: Any = None            # PlacementSpec | strategy name | None
     engine: str = "jnp"              # "jnp" | "select" | "megakernel"
+    telemetry: Any = None            # TelemetrySpec | None = tracing off
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -170,6 +182,12 @@ class OverlayConfig:
                 f"{self.eject_policy!r}")
         from ..place.spec import coerce  # lazy: placement specs live in place
         coerce(self.placement)  # raises on malformed placement values
+        if self.telemetry is not None:
+            from ..telemetry.spec import TelemetrySpec  # lazy, like place.spec
+            if not isinstance(self.telemetry, TelemetrySpec):
+                raise TypeError(
+                    f"telemetry must be a repro.telemetry.TelemetrySpec or "
+                    f"None, got {type(self.telemetry).__name__}")
 
     @property
     def sel_lat(self) -> int:
@@ -239,6 +257,47 @@ def _resolve(cfg: OverlayConfig, scheduler: schedulers.Scheduler | None):
     return scheduler if scheduler is not None else schedulers.get(cfg.scheduler)
 
 
+# ---------------------------------------------------------------------------
+# Stat-counter registry. Each entry is a monotone int32 *scalar* counter in
+# the simulation state: zero-initialized, incremented by the cycle body with
+# a cross-shard ``all_reduce`` on the per-cycle delta, and repaired once per
+# chunk as ``start + all_reduce(end - start)`` (see make_chunk_fn). Because
+# a completed overlay is a fixed point of the cycle body, every registered
+# counter's increment must be zero once ``done`` holds — that is what lets
+# the guard-free chunk engines over-simulate past completion without drift.
+# Register new counters here (telemetry, future schedulers); the chunk
+# repair, init_state, the megakernel repair and the sharded engines all
+# iterate the registry, so no repair code needs editing.
+# ---------------------------------------------------------------------------
+
+STAT_COUNTERS: dict[str, str] = {}
+
+
+def register_counter(name: str, doc: str = "") -> None:
+    """Add a monotone scalar int32 stat counter to every engine's state."""
+    if name in STAT_COUNTERS:
+        raise ValueError(f"duplicate stat counter {name!r}")
+    STAT_COUNTERS[name] = doc
+
+
+for _name, _doc in (
+    ("delivered", "packets ejected into a PE's local memory"),
+    ("noc_deflections", "route-contention deflections: in-flight S-turn "
+     "losers plus blocked PE injections (away from the destination)"),
+    ("eject_deflections", "eject-port losers at the destination router, "
+     "sent around the ring again"),
+    ("deflections", "noc_deflections + eject_deflections (back-compat sum)"),
+    ("busy_cycles", "node fires summed over PEs and cycles"),
+):
+    register_counter(_name, _doc)
+
+
+def stat_keys(state: dict) -> tuple[str, ...]:
+    """Registered counters present in ``state``, in registration order —
+    the keys the chunk repair stacks into its one-collective stat block."""
+    return tuple(k for k in STAT_COUNTERS if k in state)
+
+
 def init_state(g: DeviceGraph, cfg: OverlayConfig,
                scheduler: schedulers.Scheduler | None = None):
     """Policy-agnostic simulation state. Scheduler state is namespaced under
@@ -251,7 +310,7 @@ def init_state(g: DeviceGraph, cfg: OverlayConfig,
     value = jnp.where(is_input, g["init_value"], 0.0)
     lat = sched.sel_lat(cfg, L // bitvec.FLAGS_PER_WORD)
 
-    return dict(
+    state = dict(
         pending=g["fanin"].astype(jnp.int32),
         operands=jnp.zeros((nx, ny, L, 2), jnp.float32),
         computed=computed,
@@ -266,11 +325,14 @@ def init_state(g: DeviceGraph, cfg: OverlayConfig,
         link_e=noc.empty_packets(nx, ny),
         link_s=noc.empty_packets(nx, ny),
         cycle=jnp.int32(0),
-        delivered=jnp.int32(0),
-        deflections=jnp.int32(0),
-        busy_cycles=jnp.int32(0),
         done=jnp.bool_(False),
+        **{k: jnp.int32(0) for k in STAT_COUNTERS},
     )
+    if cfg.telemetry is not None:
+        from ..telemetry import trace as telemetry_trace  # lazy, like place
+
+        state["telem"] = telemetry_trace.init(cfg.telemetry, nx, ny)
+    return state
 
 
 def make_cycle_fn(
@@ -292,6 +354,9 @@ def make_cycle_fn(
     sched = _resolve(cfg, scheduler)
     nx, ny, L = g["opcode"].shape
     ny_i32 = jnp.int32(global_ny if global_ny is not None else ny)
+    telem_spec = cfg.telemetry
+    if telem_spec is not None:
+        from ..telemetry import trace as telemetry_trace  # lazy, like place
 
     def cycle(s):
         # ---- 1. offer injection packet from the active node's fanout cursor
@@ -386,6 +451,10 @@ def make_cycle_fn(
         # ---- 5. scheduler: select (and consume) the next node on idle PEs
         idle = active < 0
         gate = idle & (sel_wait == 0)
+        if telem_spec is not None and telem_spec.sched:
+            # Ready-set depth as the scheduler sees it at pick time: after
+            # this cycle's fires enqueued, before the pick consumes.
+            rdy_depth = sched.ready_depth(sched_st)
         cand, have, sched_st = sched.step(sched_st, idle, gate,
                                           use_pallas=cfg.engine == "select")
         can_wait = idle & have & (sel_wait > 0)
@@ -408,7 +477,17 @@ def make_cycle_fn(
         links_idle = all_reduce(noc.links_empty(link_e, link_s))
         done = all_computed & no_ready & no_active & links_idle
 
-        return dict(
+        # Deflections, split by cause (see noc.router_cycle): a blocked PE
+        # injection keeps the packet circulating in the PE just as a lost
+        # S-turn keeps it circulating on the ring, so both count as NoC
+        # (route-contention) deflections; eject-port losers count separately.
+        # ``deflections`` stays their sum — bit-exactly the pre-split stat.
+        inj_blocked = inj_valid & ~accepted
+        d_noc = all_reduce(
+            inj_blocked.sum() + deflected["noc"].sum()).astype(jnp.int32)
+        d_ej = all_reduce(deflected["eject"].sum()).astype(jnp.int32)
+
+        out = dict(
             pending=pending, operands=operands, computed=computed, value=value,
             remaining=remaining,
             sched=sched_st,
@@ -417,17 +496,54 @@ def make_cycle_fn(
             link_e=link_e, link_s=link_s,
             cycle=s["cycle"] + 1,
             delivered=s["delivered"] + all_reduce(n_delivered).astype(jnp.int32),
-            deflections=s["deflections"]
-            + all_reduce((inj_valid & ~accepted).sum()
-                         + deflected.sum()).astype(jnp.int32),
+            noc_deflections=s["noc_deflections"] + d_noc,
+            eject_deflections=s["eject_deflections"] + d_ej,
+            deflections=s["deflections"] + d_noc + d_ej,
             busy_cycles=s["busy_cycles"] + all_reduce(n_fired).astype(jnp.int32),
             done=done,
         )
+        if telem_spec is not None:
+            # Observer only: every input below is shard-local and already
+            # computed by the model above; nothing feeds back into it.
+            out["telem"] = telemetry_trace.accumulate(
+                telem_spec, s["telem"],
+                cycle=s["cycle"],
+                fired=fired.sum(axis=0).astype(jnp.int32),
+                occupied=(s["active"] >= 0),
+                link_e_busy=link_e["valid"],
+                link_s_busy=link_s["valid"],
+                defl_noc=deflected["noc"] + inj_blocked.astype(jnp.int32),
+                defl_eject=deflected["eject"],
+                eject_grant=ej_valid.sum(axis=0).astype(jnp.int32),
+                ready_depth=rdy_depth if telem_spec.sched else None,
+                sel=sel, cand=cand,
+                no_ready=idle & ~have,
+                inj_blocked=inj_blocked,
+                sel_waiting=can_wait,
+            )
+        return out
 
     return cycle
 
 
-_STAT_KEYS = ("delivered", "deflections", "busy_cycles")
+def repair_telemetry(telem: dict, overshoot):
+    """Undo the only telemetry increment that is NOT zero at the completed-
+    overlay fixed point: once every PE is idle with an empty ready set,
+    ``stall_no_ready`` gains 1 per PE per over-simulated cycle inside a
+    guard-free chunk. ``overshoot`` is the chunk's over-simulated cycle count
+    (``end_cycle - repaired_cycle``: 0 while running, K - first - 1 when the
+    run completes in-chunk, K for an already-done element re-entering). Every
+    other trace leaf's increment vanishes at the fixed point (no fires, empty
+    links, no packets, empty ready sets, no picks), so chunk overshoot never
+    touches it — asserted against check_every=1 in tests/test_telemetry.py.
+    """
+    if "stall_no_ready" not in telem:
+        return telem
+    out = dict(telem)
+    over = jnp.asarray(overshoot, jnp.int32)
+    out["stall_no_ready"] = telem["stall_no_ready"] - over.reshape(
+        over.shape + (1, 1))
+    return out
 
 
 def make_chunk_fn(cycle_fn, check_every: int,
@@ -453,7 +569,8 @@ def make_chunk_fn(cycle_fn, check_every: int,
     """
 
     def chunk(s):
-        start_stats = jnp.stack([s[k] for k in _STAT_KEYS])
+        keys = stat_keys(s)
+        start_stats = jnp.stack([s[k] for k in keys])
         start_cycle = s["cycle"]
         start_done = s["done"]  # already-finished batch elements re-enter
 
@@ -470,12 +587,14 @@ def make_chunk_fn(cycle_fn, check_every: int,
             start_done, start_cycle,
             jnp.where(any_done, start_cycle + first + 1, s2["cycle"]))
 
-        end_stats = jnp.stack([s2[k] for k in _STAT_KEYS])
+        end_stats = jnp.stack([s2[k] for k in keys])
         stats = start_stats + all_reduce(end_stats - start_stats)
 
         out = dict(s2, done=any_done, cycle=cycle)
-        for i, k in enumerate(_STAT_KEYS):
+        for i, k in enumerate(keys):
             out[k] = stats[i]
+        if "telem" in out:
+            out["telem"] = repair_telemetry(out["telem"], s2["cycle"] - cycle)
         return out
 
     return chunk
@@ -510,8 +629,13 @@ class SimResult:
     done: bool
     values: np.ndarray        # [N] node values in global id order
     delivered: int
-    deflections: int
+    deflections: int          # noc_deflections + eject_deflections
     busy_cycles: int
+    noc_deflections: int = 0
+    eject_deflections: int = 0
+    #: repro.telemetry.TelemetryResult when the config carried a
+    #: TelemetrySpec, else None.
+    telemetry: Any = None
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "nx", "ny"))
@@ -537,9 +661,21 @@ def _run_jit(g: dict, cfg: OverlayConfig, nx: int, ny: int):
     return final
 
 
-def _unpack_result(final, gm: GraphMemory, b: int | None = None) -> SimResult:
+def _unpack_result(final, gm: GraphMemory, b: int | None = None,
+                   cfg: OverlayConfig | None = None) -> SimResult:
     pick = (lambda a: a[b]) if b is not None else (lambda a: a)
     value = np.asarray(pick(final["value"])).reshape(gm.num_pes, gm.lmax)
+    telemetry = None
+    if "telem" in final and cfg is not None and cfg.telemetry is not None:
+        from ..telemetry.result import TelemetryResult  # lazy, like place
+
+        telemetry = TelemetryResult(
+            spec=cfg.telemetry,
+            traces={k: np.asarray(pick(v))
+                    for k, v in final["telem"].items()},
+            cycles=int(pick(final["cycle"])),
+            nx=gm.nx, ny=gm.ny,
+        )
     return SimResult(
         cycles=int(pick(final["cycle"])),
         done=bool(pick(final["done"])),
@@ -547,6 +683,9 @@ def _unpack_result(final, gm: GraphMemory, b: int | None = None) -> SimResult:
         delivered=int(pick(final["delivered"])),
         deflections=int(pick(final["deflections"])),
         busy_cycles=int(pick(final["busy_cycles"])),
+        noc_deflections=int(pick(final["noc_deflections"])),
+        eject_deflections=int(pick(final["eject_deflections"])),
+        telemetry=telemetry,
     )
 
 
@@ -581,7 +720,7 @@ def simulate(gm: GraphMemory | DataflowGraph, cfg: OverlayConfig | None = None,
     gm = _as_memory(gm, cfg, nx, ny)
     g = device_graph(gm)
     final = _run_jit(dict(g), cfg, gm.nx, gm.ny)
-    return _unpack_result(final, gm)
+    return _unpack_result(final, gm, cfg=cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -656,8 +795,8 @@ def simulate_batch(gm: GraphMemory | DataflowGraph,
     finish — or exhaust their own ``max_cycles`` — freeze in place, so every
     returned result is identical to a serial :func:`simulate` call with the
     same config. Requirements: all configs share ``eject_capacity``,
-    ``eject_policy``, ``engine``, and ``placement`` (they change the
-    traced structure / the packed memory image).
+    ``eject_policy``, ``engine``, ``placement`` and ``telemetry`` (they
+    change the traced structure / the packed memory image).
 
     A raw :class:`~repro.core.graph.DataflowGraph` (plus ``nx``/``ny``) is
     placed per the shared ``placement`` before the sweep.
@@ -680,6 +819,11 @@ def simulate_batch(gm: GraphMemory | DataflowGraph,
     if len(placements) != 1:
         raise ValueError(
             f"simulate_batch needs a uniform placement, got {placements}")
+    telems = {c.telemetry for c in cfgs}
+    if len(telems) != 1:
+        raise ValueError(
+            f"simulate_batch needs a uniform telemetry spec (it shapes the "
+            f"traced state), got {telems}")
     if not isinstance(gm, GraphMemory):
         # The packed memory image is shared across the batch, so every
         # scheduler must want the same slot layout — otherwise elements would
@@ -712,4 +856,4 @@ def simulate_batch(gm: GraphMemory | DataflowGraph,
 
     final = _run_batch_jit(dict(g), base, tuple(names), policy_ids, sel_lats,
                            max_cycs, gm.nx, gm.ny)
-    return [_unpack_result(final, gm, b) for b in range(len(cfgs))]
+    return [_unpack_result(final, gm, b, cfg=base) for b in range(len(cfgs))]

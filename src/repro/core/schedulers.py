@@ -11,6 +11,8 @@ policy behind a small protocol so the cycle kernel in
   * ``select(st, idle)``                  -> (candidate slot, have) per PE
   * ``commit(st, sel, cand)``             -> consume the candidate where ``sel``
   * ``empty(st)``                         -> scalar bool: no node is queued
+  * ``ready_depth(st)``                   -> [nx, ny] queued-ready count (the
+    :mod:`repro.telemetry` probe; never called unless tracing is on)
   * ``sel_lat(cfg, num_words)``           -> exposed select latency (cycles)
 
 The cycle kernel drives one fused entry point per cycle,
@@ -128,6 +130,13 @@ class Scheduler:
     def empty(self, st: dict):
         raise NotImplementedError
 
+    def ready_depth(self, st: dict):
+        """[nx, ny] int32 count of queued-ready nodes per PE — the telemetry
+        probe behind :mod:`repro.telemetry`'s ready-set-depth trace. Purely
+        observational: never called by the cycle kernel unless a
+        ``TelemetrySpec`` asks for scheduler traces."""
+        raise NotImplementedError
+
     def step(self, st: dict, idle, gate, *, use_pallas: bool = False):
         """Fused select + commit: the cycle kernel's per-cycle entry point.
 
@@ -186,6 +195,9 @@ class OooScheduler(Scheduler):
     def empty(self, st):
         return (st["rdy"] == 0).all()
 
+    def ready_depth(self, st):
+        return bitvec.count_set(st["rdy"])
+
     def step(self, st, idle, gate, *, use_pallas=False):
         if not use_pallas:
             return super().step(st, idle, gate, use_pallas=False)
@@ -240,6 +252,9 @@ class InorderScheduler(Scheduler):
     def empty(self, st):
         return (st["size"] == 0).all()
 
+    def ready_depth(self, st):
+        return st["size"]
+
 
 class _RotatingRdyScheduler(Scheduler):
     """Shared machinery: RDY bit vector scanned from a rotating pointer.
@@ -274,6 +289,9 @@ class _RotatingRdyScheduler(Scheduler):
 
     def empty(self, st):
         return (st["rdy"] == 0).all()
+
+    def ready_depth(self, st):
+        return bitvec.count_set(st["rdy"])
 
     def step(self, st, idle, gate, *, use_pallas=False):
         if not use_pallas:
@@ -385,6 +403,12 @@ class BatchedScheduler(Scheduler):
             return self.policies[0].empty(st[self.names[0]])
         es = [p.empty(st[n]) for n, p in zip(self.names, self.policies)]
         return jnp.select(self._preds(st), es, es[0])
+
+    def ready_depth(self, st):
+        if self._solo:
+            return self.policies[0].ready_depth(st[self.names[0]])
+        ds = [p.ready_depth(st[n]) for n, p in zip(self.names, self.policies)]
+        return jnp.select(self._preds(st), ds, ds[0])
 
     def step(self, st, idle, gate, *, use_pallas=False):
         out = dict(st)

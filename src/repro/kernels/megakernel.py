@@ -138,7 +138,8 @@ def make_mega_chunk_fn(
         # Chunk repair — the same arithmetic as overlay.make_chunk_fn,
         # applied along the in-chunk axis 0 (elementwise over any batch
         # axis, so batched repair == vmap of the solo repair).
-        start_stats = jnp.stack([s[k] for k in overlay._STAT_KEYS])
+        keys = overlay.stat_keys(s)
+        start_stats = jnp.stack([s[k] for k in keys])
         start_cycle = s["cycle"]
         start_done = s["done"]
         done_trace = all_reduce(done_trace)            # one collective
@@ -147,12 +148,18 @@ def make_mega_chunk_fn(
         cycle_ct = jnp.where(
             start_done, start_cycle,
             jnp.where(any_done, start_cycle + first + 1, s2["cycle"]))
-        end_stats = jnp.stack([s2[k] for k in overlay._STAT_KEYS])
+        end_stats = jnp.stack([s2[k] for k in keys])
         stats = start_stats + all_reduce(end_stats - start_stats)
 
         out = dict(s2, done=any_done, cycle=cycle_ct)
-        for i, k in enumerate(overlay._STAT_KEYS):
+        for i, k in enumerate(keys):
             out[k] = stats[i]
+        if "telem" in out:
+            # Telemetry leaves ride the state pytree into kernel refs like
+            # any other leaf, so the fused engine gets full traces for free;
+            # only the fixed-point overshoot repair happens out here.
+            out["telem"] = overlay.repair_telemetry(
+                out["telem"], s2["cycle"] - cycle_ct)
         return out
 
     return chunk

@@ -44,6 +44,10 @@ def _bench():
         "fig1_full": {"rows": [
             {"name": "fig1_full_n470000", "wall_s": 60.0,
              "cycles_round_robin": 40000, "cycles_multilevel": 25000}]},
+        "telemetry": {"rows": [
+            {"name": "telemetry_arrow_n100_ooo", "wall_s": 6.0,
+             "cycles_ooo": 120, "ctr_stall_no_ready": 5000,
+             "ctr_noc_deflections": 300, "link_util_p50": 0.4}]},
     }
 
 
@@ -167,6 +171,44 @@ def test_guided_gate_uses_exact_counters_not_rounded_ratio(tmp_path):
     del row["cost_evals"], row["cost_evals_unguided"]
     row["eval_ratio"] = cb.GUIDED_EVAL_RATIO_MAX + 0.01
     assert _run(tmp_path, _bench(), fresh2) == 1
+
+
+def test_telemetry_counter_drift_fails_both_directions(tmp_path, capsys):
+    # Instrument counters are semantics, not perf: a *decrease* is just as
+    # much drift as an increase, unlike cycle counts.
+    for delta in (+1, -1):
+        fresh = _bench()
+        fresh["telemetry"]["rows"][0]["ctr_stall_no_ready"] += delta
+        assert _run(tmp_path, _bench(), fresh) == 1
+        assert "bit-exactly" in capsys.readouterr().out
+
+
+def test_telemetry_cycles_still_gated_no_increase(tmp_path):
+    fresh = _bench()
+    fresh["telemetry"]["rows"][0]["cycles_ooo"] = 121
+    assert _run(tmp_path, _bench(), fresh) == 1
+
+
+def test_telemetry_floats_are_informational(tmp_path):
+    # Utilization percentiles derive from wall-independent integers but are
+    # rounded floats — only ctr_* keys carry the bit-exact contract.
+    fresh = _bench()
+    fresh["telemetry"]["rows"][0]["link_util_p50"] = 0.9
+    assert _run(tmp_path, _bench(), fresh) == 0
+
+
+def test_vanished_telemetry_row_fails(tmp_path, capsys):
+    fresh = _bench()
+    fresh["telemetry"]["rows"] = []
+    assert _run(tmp_path, _bench(), fresh) == 1
+    assert "telemetry row missing" in capsys.readouterr().out
+
+
+def test_vanished_ctr_key_fails(tmp_path, capsys):
+    fresh = _bench()
+    del fresh["telemetry"]["rows"][0]["ctr_noc_deflections"]
+    assert _run(tmp_path, _bench(), fresh) == 1
+    assert "ctr_noc_deflections" in capsys.readouterr().out
 
 
 def test_bad_usage_exit_code():
