@@ -25,6 +25,12 @@ deflection split, busiest-link cycles) are gated *bit-exact in both
 directions*: the instrument's output on a deterministic workload must not
 move at all unless the committed snapshot is updated deliberately.
 
+The ``service`` section's ``svc_*`` counters (cached/fresh cycle pairs,
+stream hit/miss/simulation counts, frontier sizes) get the same
+both-direction bit-exact treatment, plus two fresh-run relations:
+cached cycles == recomputed cycles per row, and the replayed stream's
+hit rate >= SERVICE_HIT_RATE_FLOOR.
+
 Usage:  python benchmarks/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
@@ -41,6 +47,11 @@ PRUNE_GAP_MAX = 1.05
 #: budget: the surrogate gate must screen out at least half the proposals
 #: an unguided run would have cost-evaluated (exact integer counters).
 GUIDED_EVAL_RATIO_MAX = 0.5
+#: minimum cache hit rate on the replayed service stream: the 32-query /
+#: 8-distinct stream is 75% repeats, and every repeat must answer from the
+#: content-hash cache — a hit rate under 0.5 means repeat queries are
+#: re-simulating.
+SERVICE_HIT_RATE_FLOOR = 0.5
 
 
 def _cycle_counts(bench: dict) -> dict[str, int]:
@@ -56,7 +67,7 @@ def _cycle_counts(bench: dict) -> dict[str, int]:
     # blocking. (jnp_cycles_per_sec / cycles_per_sec are throughput and stay
     # informational: only the cycles_ prefix is gated.)
     for section in ("placement", "eject", "surrogate", "guided", "fig1_full",
-                    "megakernel", "telemetry"):
+                    "megakernel", "telemetry", "service"):
         flat_rows += bench.get(section, {}).get("rows", [])
     for row in flat_rows:
         for key, val in row.items():
@@ -161,11 +172,52 @@ def _telemetry_counters(baseline: dict, fresh: dict) -> list[str]:
     return bad
 
 
+def _service_gates(baseline: dict, fresh: dict) -> list[str]:
+    """Blocking placement-service contract violations.
+
+    ``svc_*`` keys are exact deterministic integers (cached / fresh cycle
+    pairs, hit/miss/simulation counters, frontier point counts) — like the
+    telemetry ``ctr_*`` counters they are gated bit-exact in BOTH
+    directions against the committed snapshot; a moved counter means the
+    caching layer changed behavior even if cycle counts look fine. Two
+    fresh-run relations also block: ``svc_cycles_cached`` must equal
+    ``svc_cycles_fresh`` row by row (a cache hit must be indistinguishable
+    from recomputation), and the stream ``hit_rate`` must clear
+    ``SERVICE_HIT_RATE_FLOOR`` (every repeat query must actually hit).
+    """
+    bad = []
+    fresh_rows = {row["name"]: row
+                  for row in fresh.get("service", {}).get("rows", [])}
+    for row in baseline.get("service", {}).get("rows", []):
+        new = fresh_rows.get(row["name"])
+        for key, base in sorted(row.items()):
+            if not key.startswith("svc_"):
+                continue
+            if new is None:
+                bad.append(f"{row['name']}: service row missing from "
+                           f"fresh run")
+                break
+            if key not in new:
+                bad.append(f"{row['name']}.{key}: missing (was {base})")
+            elif int(new[key]) != int(base):
+                bad.append(f"{row['name']}.{key}: {base} -> {new[key]} "
+                           f"(service counters must match bit-exactly)")
+    for row in fresh_rows.values():
+        if {"svc_cycles_cached", "svc_cycles_fresh"} <= row.keys() \
+                and row["svc_cycles_cached"] != row["svc_cycles_fresh"]:
+            bad.append(f"{row['name']}: cached {row['svc_cycles_cached']} "
+                       f"!= fresh {row['svc_cycles_fresh']} cycles")
+        if "hit_rate" in row and row["hit_rate"] < SERVICE_HIT_RATE_FLOOR:
+            bad.append(f"{row['name']}: hit_rate {row['hit_rate']} "
+                       f"< floor {SERVICE_HIT_RATE_FLOOR}")
+    return bad
+
+
 def _wall_times(bench: dict) -> dict[str, float]:
     out: dict[str, float] = {}
     rows = list(bench.get("fig1", []))
     for section in ("placement", "eject", "surrogate", "guided", "fig1_full",
-                    "megakernel", "telemetry"):
+                    "megakernel", "telemetry", "service"):
         rows += bench.get(section, {}).get("rows", [])
     for row in rows:
         out[f"{row['name']}.wall_s"] = float(row["wall_s"])
@@ -210,7 +262,8 @@ def main(baseline_path: str, fresh_path: str) -> int:
     quality = _surrogate_quality(baseline, fresh)
     guided = _guided_quality(fresh)
     telem = _telemetry_counters(baseline, fresh)
-    failures = regressions + quality + guided + telem
+    service = _service_gates(baseline, fresh)
+    failures = regressions + quality + guided + telem + service
     if failures:
         if regressions:
             print(f"\nFAIL: {len(regressions)} cycle-count regression(s):")
@@ -229,6 +282,10 @@ def main(baseline_path: str, fresh_path: str) -> int:
         if telem:
             print(f"\nFAIL: {len(telem)} telemetry counter drift(s):")
             for line in telem:
+                print(f"  {line}")
+        if service:
+            print(f"\nFAIL: {len(service)} service contract violation(s):")
+            for line in service:
                 print(f"  {line}")
         return 1
     print(f"\nOK: {len(base_cyc)} tracked cycle counts, no regressions.")

@@ -7,7 +7,8 @@ the paper's evaluation setup. The paper's own matrices are not published;
 sizes sweep a few K to ~500K nodes as in Fig. 1.
 
 Each graph size runs the requested scheduler policies through
-``simulate_batch``: the cycle body is vmapped over the policy axis, so a
+``repro.run(gm, batch=...)``: the cycle body is vmapped over the policy
+axis, so a
 sweep compiles once per (graph, memory layout) instead of retracing per
 scheduler. Policies are grouped by ``wants_criticality_order`` and each
 group gets the matching GraphMemory layout — the seed methodology (``ooo``
@@ -21,9 +22,10 @@ from __future__ import annotations
 
 import time
 
+from repro.api import run as overlay_run
 from repro.core import schedulers
 from repro.core import workloads as wl
-from repro.core.overlay import OverlayConfig, simulate_batch
+from repro.core.overlay import OverlayConfig
 from repro.core.partition import build_graph_memory
 
 # (blocks, block_size, border): graph sizes ~15K .. ~470K nodes
@@ -54,7 +56,7 @@ def _run_policies(g, nx, ny, policies, max_cycles=8_000_000, timed=False,
         cfgs = [OverlayConfig(scheduler=p, max_cycles=max_cycles,
                               check_every=check_every, engine=engine)
                 for p in group]
-        for p, r in zip(group, simulate_batch(gm, cfgs)):
+        for p, r in zip(group, overlay_run(gm, batch=cfgs)):
             assert r.done, p
             cyc[p] = r.cycles
         runs.append((gm, cfgs))
@@ -65,7 +67,7 @@ def _run_policies(g, nx, ny, policies, max_cycles=8_000_000, timed=False,
     for _ in range(2):  # min over reps: shared machines have noisy clocks
         t0 = time.time()
         for gm, cfgs in runs:
-            simulate_batch(gm, cfgs)
+            overlay_run(gm, batch=cfgs)
         hot = min(hot, time.time() - t0)
     return cyc, wall, hot
 

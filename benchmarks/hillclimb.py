@@ -9,14 +9,17 @@ the top HBM-traffic contributors (trip-count-aware) for hypothesis building.
 Results append to experiments/perf/<arch>__<shape>__<tag>.json.
 
 Overlay mode (``--overlay``) is a thin CLI over
-:func:`repro.place.config_hillclimb`: greedy coordinate descent over
-(placement strategy — including the NoC-aware annealer — x scheduler policy
-x exposed select latency x eject capacity), minimizing simulated cycle count
-on an arrow-LU workload. Each neighborhood that shares a GraphMemory + eject
-capacity is evaluated through ONE ``simulate_batch`` call (the vmapped sweep
-engine), so a whole step costs a single XLA program. Output is the standard
-machine-readable benchmark shape: ``name,us_per_call,derived`` CSV on stdout
-plus a JSON record under --out.
+:func:`repro.service.explore`: the design-space explorer sweeps (scheduler
+policy x eject policy x grid x placement strategy — including the NoC-aware
+annealer) through the placement service, so every point is one cached /
+batched / amortized query and repeat sweeps of the same graph are nearly
+free. Where the old greedy coordinate descent walked one path to one
+config, the explorer returns the full bit-deterministic Pareto frontier
+over (simulated cycles, PE count). Output keeps the standard
+machine-readable benchmark shape: ``name,us_per_call,derived`` CSV on
+stdout (``hillclimb_step{i}`` = the swept points in deterministic order,
+``hillclimb_best`` = the minimum-cycle point) plus a JSON record under
+--out.
 
   PYTHONPATH=src python -m benchmarks.hillclimb --overlay --blocks 8 --tag hc1
 """
@@ -72,15 +75,20 @@ def apply_overrides(cfg, ov):
 
 
 def overlay_hillclimb(args):
-    from repro import place
+    import time
+
     from repro.core import workloads as wl
+    from repro.service import explore
 
     g = wl.arrow_lu_graph(args.blocks, args.block_size, args.border,
                           seed=args.seed)
-    rec = place.config_hillclimb(g, args.nx, args.ny,
-                                 max_cycles=args.max_cycles, seed=args.seed)
+    # sweep the default explorer axes, pinned to the requested grid
+    t0 = time.time()
+    rec = explore(g, space={"grid": ((args.nx, args.ny),)},
+                  max_cycles=args.max_cycles)
     rec.update({
         "mode": "overlay",
+        "wall_s": round(time.time() - t0, 3),
         "workload": {"family": "arrow_lu", "blocks": args.blocks,
                      "block_size": args.block_size, "border": args.border,
                      "nodes": g.num_nodes, "edges": g.num_edges,
@@ -93,17 +101,16 @@ def overlay_hillclimb(args):
         json.dump(rec, f, indent=1)
 
     # Standard machine-readable benchmark output: CSV rows on stdout
-    # (derived = cycles at each accepted step; final row is the optimum;
-    # 'inf' marks configs that never finished within --max-cycles).
-    fmt = lambda c: "inf" if c is None else c
+    # (derived = simulated cycles per swept point, deterministic order;
+    # final row is the minimum-cycle point of the sweep).
     print("name,us_per_call,derived")
-    for i, step in enumerate(rec["trajectory"]):
-        print(f"hillclimb_step{i},0.0,{fmt(step['cycles'])}")
-    print(f"hillclimb_best,{round(1e6 * rec['wall_s'], 1)},"
-          f"{fmt(rec['best_cycles'])}")
+    for i, p in enumerate(rec["points"]):
+        print(f"hillclimb_step{i},0.0,{p['cycles']}")
+    best = min(rec["points"], key=lambda p: (p["cycles"], p["name"]))
+    print(f"hillclimb_best,{round(1e6 * rec['wall_s'], 1)},{best['cycles']}")
     print(f"# wrote {path}", file=sys.stderr)
-    print(f"# best_config={rec['best_config']} "
-          f"evaluations={rec['evaluations']}", file=sys.stderr)
+    print(f"# best_config={best['name']} frontier="
+          f"{[p['name'] for p in rec['frontier']]}", file=sys.stderr)
     return rec
 
 

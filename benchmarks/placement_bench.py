@@ -56,7 +56,8 @@ import numpy as np
 
 from repro import place, surrogate
 from repro.core import workloads as wl
-from repro.core.overlay import OverlayConfig, simulate
+from repro.api import run as overlay_run
+from repro.core.overlay import OverlayConfig
 from repro.core.partition import build_graph_memory
 
 # (row name suffix, arrow_lu args, grid, anneal budget)
@@ -381,7 +382,7 @@ def run_eject():
         t0 = time.time()
         res = {}
         for pol in ("n_first", "priority"):
-            res[pol] = simulate(gm, OverlayConfig(
+            res[pol] = overlay_run(gm, OverlayConfig(
                 scheduler="ooo", eject_policy=pol, max_cycles=4_000_000))
             assert res[pol].done, (name, pol)
         wall = time.time() - t0

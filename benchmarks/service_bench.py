@@ -1,0 +1,159 @@
+"""BENCH ``service`` section: the placement service's amortization story,
+CI-gated.
+
+Replays the deterministic 32-query / 8-distinct-graph stream
+(:func:`repro.core.workloads.service_stream` — 75% repeats) through one
+:class:`~repro.service.service.PlacementService` and reports:
+
+  * per distinct graph: ``svc_cycles_cached`` (the answer a repeat query
+    served from the content-hash cache) and ``svc_cycles_fresh`` (the same
+    query recomputed from scratch in a cold service). ``check_bench``'s
+    service gate requires the pair to be EQUAL within the run and bit-exact
+    against the committed snapshot in both directions — a cached integer
+    must be indistinguishable from a fresh one;
+  * the stream summary: exact hit/miss/simulation counters (bit-exact
+    gated) plus ``hit_rate`` (floor-gated at
+    ``check_bench.SERVICE_HIT_RATE_FLOOR``) — every repeat must answer
+    from the cache with zero simulations;
+  * the design-space explorer's Pareto frontier on the first stream graph:
+    per-point ``cycles_frontier`` (no-increase gated like every tracked
+    cycle count).
+
+Wall time (cold stream vs from-scratch replay; ``derived`` = amortization
+speedup) stays informational — shared CI runners.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import workloads as wl
+from repro.core.overlay import OverlayConfig
+from repro.service import PlacementQuery, PlacementService, explore
+
+NX = NY = 4
+BUDGET = 2048
+MAX_CYCLES = 1_000_000
+
+#: explorer space for the frontier rows: small enough for CI, wide enough
+#: to produce a non-trivial cycles-vs-area trade-off.
+FRONTIER_SPACE = {
+    "scheduler": ("ooo", "inorder"),
+    "eject_policy": ("n_first",),
+    "grid": ((2, 2), (4, 4)),
+    "placement": ("identity", "anneal"),
+}
+
+
+def _query(g):
+    return PlacementQuery(
+        graph=g, nx=NX, ny=NY, budget=BUDGET,
+        cfg=OverlayConfig(placement="anneal", max_cycles=MAX_CYCLES))
+
+
+def run_stream():
+    stream = wl.service_stream(n_queries=32, distinct=8, seed=0)
+
+    svc = PlacementService()
+    t0 = time.time()
+    cached: dict = {}   # name -> cycles served to a repeat query
+    first: dict = {}    # name -> (graph, first answer)
+    for name, g in stream:
+        r = svc.query(_query(g))
+        if name in first:
+            assert r.cached, f"{name}: repeat query missed the cache"
+            assert r.cycles == first[name][1].cycles, name
+            cached[name] = r.cycles
+        else:
+            assert not r.cached, f"{name}: first sighting claimed a hit"
+            first[name] = (g, r)
+    stream_wall = time.time() - t0
+    rep = svc.report()
+    n_repeats = len(stream) - len(first)
+    assert rep["cache_hits"] == n_repeats, rep
+    assert rep["simulations"] == len(first), rep
+
+    # Steady-state replay: the same 32 queries against the warm service are
+    # all cache hits — this is the amortized cost a long-lived service pays.
+    t0 = time.time()
+    for name, g in stream:
+        r = svc.query(_query(g))
+        assert r.cached, f"{name}: warm replay missed the cache"
+    replay_wall = time.time() - t0
+
+    # From-scratch recomputation of every distinct query in a cold service:
+    # the cached integers must be indistinguishable from these. (Runs on a
+    # warm jit cache, so per-query wall here is the no-result-cache floor.)
+    t0 = time.time()
+    fresh = {name: PlacementService().query(_query(g)).cycles
+             for name, (g, _) in first.items()}
+    fresh_wall = time.time() - t0
+
+    rows = []
+    for name, (g, r0) in sorted(first.items()):
+        assert cached[name] == fresh[name] == r0.cycles, (
+            name, cached[name], fresh[name], r0.cycles)
+        rows.append({
+            "name": f"service_{name}",
+            "us_per_call": 0.0,
+            "derived": "cached==fresh",
+            "wall_s": 0.0,
+            "nodes": g.num_nodes,
+            "cycles_anneal": int(r0.cycles),          # no-increase gated
+            "svc_cycles_cached": int(cached[name]),   # bit-exact gated
+            "svc_cycles_fresh": int(fresh[name]),     # bit-exact gated
+        })
+
+    naive_wall = fresh_wall / max(1, len(first)) * len(stream)
+    rows.append({
+        "name": "service_stream",
+        "us_per_call": round(1e6 * stream_wall, 1),
+        # amortization: est. warm no-cache wall for all 32 queries / the
+        # warm all-hit replay wall (steady-state service speedup)
+        "derived": round(naive_wall / max(replay_wall, 1e-9), 1),
+        "wall_s": round(stream_wall, 3),
+        "replay_wall_s": round(replay_wall, 4),
+        "fresh_wall_s": round(fresh_wall, 3),
+        "queries": len(stream),
+        "distinct": len(first),
+        # exact counters, bit-exact gated in both directions
+        "svc_hits": rep["cache_hits"],
+        "svc_misses": rep["cache_misses"],
+        "svc_simulations": rep["simulations"],
+        "svc_anneals": rep["anneals"],
+        "svc_batched_anneals": rep["batched_anneals"],
+        # floor-gated: repeats must actually hit
+        "hit_rate": round(rep["cache_hit_rate"], 4),
+    })
+    return rows
+
+
+def run_frontier():
+    name0, g0 = wl.service_stream(n_queries=1, distinct=1, seed=0)[0]
+    t0 = time.time()
+    rec = explore(g0, space=FRONTIER_SPACE, budget=BUDGET,
+                  max_cycles=MAX_CYCLES)
+    wall = time.time() - t0
+    rows = []
+    for p in rec["frontier"]:
+        rows.append({
+            "name": f"service_frontier_{p['name']}",
+            "us_per_call": 0.0,
+            "derived": f"{p['num_pes']}pes",
+            "wall_s": 0.0,
+            "graph": name0,
+            "num_pes": p["num_pes"],
+            "cycles_frontier": int(p["cycles"]),      # no-increase gated
+        })
+    rows.append({
+        "name": "service_frontier",
+        "us_per_call": round(1e6 * wall, 1),
+        "derived": f"{len(rec['frontier'])}/{len(rec['points'])}",
+        "wall_s": round(wall, 3),
+        "svc_frontier_points": len(rec["frontier"]),  # bit-exact gated
+        "svc_swept_points": len(rec["points"]),       # bit-exact gated
+    })
+    return rows
+
+
+def run():
+    return run_stream() + run_frontier()

@@ -21,7 +21,8 @@ import time
 
 from repro.core import schedulers
 from repro.core import workloads as wl
-from repro.core.overlay import OverlayConfig, simulate
+from repro.api import run as overlay_run
+from repro.core.overlay import OverlayConfig
 from repro.core.partition import build_graph_memory
 from repro.telemetry import TelemetrySpec
 
@@ -39,18 +40,18 @@ def run(nx: int = 16, ny: int = 16):
         cfg_on = OverlayConfig(scheduler=sched, max_cycles=8_000_000,
                                telemetry=spec)
         t0 = time.time()
-        off = simulate(gm, cfg_off)
-        r = simulate(gm, cfg_on)
+        off = overlay_run(gm, cfg_off)
+        r = overlay_run(gm, cfg_on)
         wall = time.time() - t0
         assert r.done and r.cycles == off.cycles, (sched, r.cycles, off.cycles)
 
         hot_off = hot_on = float("inf")
         for _ in range(2):  # min over reps: shared machines have noisy clocks
             t0 = time.time()
-            simulate(gm, cfg_off)
+            overlay_run(gm, cfg_off)
             hot_off = min(hot_off, time.time() - t0)
             t0 = time.time()
-            simulate(gm, cfg_on)
+            overlay_run(gm, cfg_on)
             hot_on = min(hot_on, time.time() - t0)
 
         rep = r.telemetry.report()

@@ -10,7 +10,8 @@ demo for DESIGN.md §4: the paper's engine as a general scheduling substrate.
 import numpy as np
 
 from repro.core.graph import OP_ADD, OP_MUL, GraphBuilder, reference_evaluate
-from repro.core.overlay import OverlayConfig, simulate
+from repro import run
+from repro.core.overlay import OverlayConfig
 from repro.core.partition import build_graph_memory
 
 rng = np.random.default_rng(0)
@@ -52,6 +53,6 @@ ref = reference_evaluate(g)
 print(f"transformer-block DAG: {g.num_nodes} nodes, {g.num_edges} edges")
 for sched in ("ooo", "inorder"):
     gm = build_graph_memory(g, 8, 8, criticality_order=(sched == "ooo"))
-    r = simulate(gm, OverlayConfig(scheduler=sched))
+    r = run(gm, OverlayConfig(scheduler=sched))
     ok = np.allclose(r.values, ref, rtol=1e-4, atol=1e-4)
     print(f"{sched:8s}: {r.cycles:5d} cycles | matches numpy: {ok}")

@@ -7,7 +7,8 @@ import numpy as np
 
 from repro.core import workloads as wl
 from repro.core.graph import reference_evaluate
-from repro.core.overlay import OverlayConfig, simulate
+from repro import run
+from repro.core.overlay import OverlayConfig
 from repro.core.partition import build_graph_memory
 
 # 1. A dataflow graph: LU factorization of a bordered block-diagonal matrix
@@ -22,7 +23,7 @@ ref = reference_evaluate(graph)
 #    order (the paper's static labeling), and simulate cycle-accurately.
 for sched in ("ooo", "inorder"):
     gm = build_graph_memory(graph, 16, 16, criticality_order=(sched == "ooo"))
-    res = simulate(gm, OverlayConfig(scheduler=sched))
+    res = run(gm, OverlayConfig(scheduler=sched))
     ok = np.allclose(res.values, ref, rtol=1e-5, atol=1e-5)
     print(f"{sched:8s}: {res.cycles:6d} cycles | values match reference: {ok} "
           f"| NoC deflections: {res.deflections}")

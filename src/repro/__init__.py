@@ -1,0 +1,25 @@
+"""repro — out-of-order dataflow scheduling for FPGA overlays, in JAX.
+
+Package front door. The two names most callers need:
+
+  * :func:`repro.run` — the unified simulate dispatcher (single / batched /
+    sharded / batched-sharded engine paths picked from its arguments);
+  * :mod:`repro.service` — the batched placement-and-simulation service
+    (content-hash result cache, batched query execution, Pareto explorer).
+
+Both are loaded lazily so ``import repro`` stays free of JAX import cost
+until an engine is actually used.
+"""
+from __future__ import annotations
+
+__all__ = ["run", "service"]
+
+
+def __getattr__(name):
+    if name == "run":
+        from .api import run
+        return run
+    if name == "service":
+        import importlib
+        return importlib.import_module(".service", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -107,9 +108,10 @@ def _mk_all_reduce(axis_x: str, axis_y: str):
     return all_reduce
 
 
-def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | None = None,
-                     axis_x: str = "data", axis_y: str = "model",
-                     nx: int | None = None, ny: int | None = None):
+def _simulate_sharded(gm: GraphMemory, mesh: Mesh,
+                      cfg: overlay.OverlayConfig | None = None,
+                      axis_x: str = "data", axis_y: str = "model",
+                      nx: int | None = None, ny: int | None = None):
     """Run the overlay with the PE grid sharded over ``mesh``.
 
     nx must divide by mesh.shape[axis_x], ny by mesh.shape[axis_y].
@@ -188,9 +190,21 @@ def simulate_sharded(gm: GraphMemory, mesh: Mesh, cfg: overlay.OverlayConfig | N
     return overlay._unpack_result(run(dict(g)), gm, cfg=cfg)
 
 
-def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
-                           cfgs, axis_x: str = "data", axis_y: str = "model",
-                           nx: int | None = None, ny: int | None = None):
+def simulate_sharded(gm: GraphMemory, mesh: Mesh,
+                     cfg: overlay.OverlayConfig | None = None,
+                     axis_x: str = "data", axis_y: str = "model",
+                     nx: int | None = None, ny: int | None = None):
+    """DEPRECATED: use :func:`repro.run` with ``mesh=mesh``."""
+    warnings.warn(
+        "distributed.simulate_sharded is deprecated; use "
+        "repro.run(gm, cfg, mesh=mesh, nx=, ny=)",
+        DeprecationWarning, stacklevel=2)
+    return _simulate_sharded(gm, mesh, cfg, axis_x, axis_y, nx, ny)
+
+
+def _simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
+                            cfgs, axis_x: str = "data", axis_y: str = "model",
+                            nx: int | None = None, ny: int | None = None):
     """Multi-config sweep of a sharded overlay: vmap inside shard_map.
 
     One XLA program runs every config of ``cfgs`` (scheduler / select latency
@@ -218,8 +232,8 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
     engines = {c.engine for c in cfgs}
     if len(engines) != 1:
         raise ValueError(
-            f"simulate_batch_sharded needs a uniform engine (use_pallas is "
-            f"deprecated sugar for engine='select'), got {engines}")
+            f"simulate_batch_sharded needs a uniform engine "
+            f"('jnp' | 'select' | 'megakernel'), got {engines}")
     placements = {c.placement for c in cfgs}
     if len(placements) != 1:
         raise ValueError(
@@ -340,3 +354,14 @@ def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
     final = run(dict(g), policy_ids, sel_lats, max_cycs)
     return [overlay._unpack_result(final, gm, b, cfg=base)
             for b in range(len(cfgs))]
+
+
+def simulate_batch_sharded(gm: GraphMemory, mesh: Mesh,
+                           cfgs, axis_x: str = "data", axis_y: str = "model",
+                           nx: int | None = None, ny: int | None = None):
+    """DEPRECATED: use :func:`repro.run` with ``mesh=mesh, batch=cfgs``."""
+    warnings.warn(
+        "distributed.simulate_batch_sharded is deprecated; use "
+        "repro.run(gm, mesh=mesh, batch=cfgs, nx=, ny=)",
+        DeprecationWarning, stacklevel=2)
+    return _simulate_batch_sharded(gm, mesh, cfgs, axis_x, axis_y, nx, ny)

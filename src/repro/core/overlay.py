@@ -120,8 +120,6 @@ class OverlayConfig:
         live inside a kernel — see docs/megakernel.md).
 
     On non-TPU backends the Pallas engines run in interpret mode.
-    ``use_pallas=True`` is the deprecated spelling of ``engine="select"``
-    and is shimmed with a warning; when both are given, ``engine`` wins.
 
     ``eject_policy`` picks the NoC's single-port eject arbitration:
     ``"n_first"`` (Hoplite's N-beats-W default) or ``"priority"`` (the
@@ -132,8 +130,11 @@ class OverlayConfig:
     handed a raw :class:`~repro.core.graph.DataflowGraph` (a
     :class:`repro.place.PlacementSpec`, a strategy name, or ``None`` =
     identity — the partitioner's default round-robin, bit-identical to the
-    pre-placement-subsystem engine). Ignored when the caller passes an
-    already-packed :class:`GraphMemory`.
+    pre-placement-subsystem engine). Whatever spelling is passed,
+    ``__post_init__`` normalizes it through :func:`repro.place.spec.resolve`
+    so the stored field is ALWAYS a canonical ``PlacementSpec`` — equal
+    layouts hash equal as jit static arguments and service cache keys.
+    Ignored when the caller passes an already-packed :class:`GraphMemory`.
 
     ``telemetry`` opts into the in-engine trace layer (a
     :class:`repro.telemetry.TelemetrySpec` or ``None`` = off, the default):
@@ -152,7 +153,6 @@ class OverlayConfig:
     eject_capacity: int = 1          # 2 == paper §II-C BRAM multipumping
     max_cycles: int = 1_000_000
     check_every: int | None = None   # cycles per termination check; None=auto
-    use_pallas: bool = False         # DEPRECATED: alias for engine="select"
     eject_policy: str = "n_first"    # NoC eject arbitration (see noc.py)
     placement: Any = None            # PlacementSpec | strategy name | None
     engine: str = "jnp"              # "jnp" | "select" | "megakernel"
@@ -162,12 +162,6 @@ class OverlayConfig:
         if self.engine not in ENGINES:
             raise ValueError(
                 f"engine must be one of {sorted(ENGINES)}, got {self.engine!r}")
-        if self.use_pallas and self.engine == "jnp":
-            warnings.warn(
-                "OverlayConfig(use_pallas=True) is deprecated; use "
-                "engine='select' (or engine='megakernel' for the fully "
-                "fused chunk engine)", DeprecationWarning, stacklevel=3)
-            object.__setattr__(self, "engine", "select")
         if self.select_latency is not None and self.select_latency < 1:
             raise ValueError(
                 f"select_latency must be >= 1 exposed cycle (or None for the "
@@ -180,8 +174,11 @@ class OverlayConfig:
             raise ValueError(
                 f"eject_policy must be 'n_first' or 'priority', got "
                 f"{self.eject_policy!r}")
-        from ..place.spec import coerce  # lazy: placement specs live in place
-        coerce(self.placement)  # raises on malformed placement values
+        from ..place.spec import resolve  # lazy: placement specs live in place
+        # Store the canonical spec (raises on malformed values): every
+        # downstream consumer — jit static-arg caches, batch uniformity
+        # checks, service content hashes — sees one spelling per layout.
+        object.__setattr__(self, "placement", resolve(self.placement))
         if self.telemetry is not None:
             from ..telemetry.spec import TelemetrySpec  # lazy, like place.spec
             if not isinstance(self.telemetry, TelemetrySpec):
@@ -708,19 +705,32 @@ def _as_memory(gm, cfg: OverlayConfig, nx: int | None, ny: int | None):
     raise TypeError(f"expected GraphMemory or DataflowGraph, got {type(gm)}")
 
 
-def simulate(gm: GraphMemory | DataflowGraph, cfg: OverlayConfig | None = None,
-             *, nx: int | None = None, ny: int | None = None) -> SimResult:
+def _simulate(gm: GraphMemory | DataflowGraph,
+              cfg: OverlayConfig | None = None,
+              *, nx: int | None = None, ny: int | None = None) -> SimResult:
     """Run the overlay to completion on a single device.
 
     Accepts a packed :class:`GraphMemory`, or a raw
     :class:`~repro.core.graph.DataflowGraph` plus ``nx``/``ny`` — the graph
     is then placed per ``cfg.placement`` (see :mod:`repro.place`).
+
+    Internal engine behind :func:`repro.run`; the public entry point is the
+    dispatcher, not this function.
     """
     cfg = cfg or OverlayConfig()
     gm = _as_memory(gm, cfg, nx, ny)
     g = device_graph(gm)
     final = _run_jit(dict(g), cfg, gm.nx, gm.ny)
     return _unpack_result(final, gm, cfg=cfg)
+
+
+def simulate(gm: GraphMemory | DataflowGraph, cfg: OverlayConfig | None = None,
+             *, nx: int | None = None, ny: int | None = None) -> SimResult:
+    """DEPRECATED: use :func:`repro.run` (same arguments, same result)."""
+    warnings.warn(
+        "overlay.simulate is deprecated; use repro.run(gm, cfg, nx=, ny=)",
+        DeprecationWarning, stacklevel=2)
+    return _simulate(gm, cfg, nx=nx, ny=ny)
 
 
 # ---------------------------------------------------------------------------
@@ -783,10 +793,10 @@ def _run_batch_jit(g: dict, cfg: OverlayConfig, names: tuple[str, ...],
     return jax.lax.while_loop(cond, freeze_body, state)
 
 
-def simulate_batch(gm: GraphMemory | DataflowGraph,
-                   cfgs: Sequence[OverlayConfig], *,
-                   nx: int | None = None,
-                   ny: int | None = None) -> list[SimResult]:
+def _simulate_batch(gm: GraphMemory | DataflowGraph,
+                    cfgs: Sequence[OverlayConfig], *,
+                    nx: int | None = None,
+                    ny: int | None = None) -> list[SimResult]:
     """Run one overlay graph under many configs as a single XLA program.
 
     The cycle body is vmapped over a stacked config axis (policy id, exposed
@@ -813,8 +823,8 @@ def simulate_batch(gm: GraphMemory | DataflowGraph,
     engines = {c.engine for c in cfgs}
     if len(engines) != 1:
         raise ValueError(
-            f"simulate_batch needs a uniform engine (use_pallas is "
-            f"deprecated sugar for engine='select'), got {engines}")
+            f"simulate_batch needs a uniform engine "
+            f"('jnp' | 'select' | 'megakernel'), got {engines}")
     placements = {c.placement for c in cfgs}
     if len(placements) != 1:
         raise ValueError(
@@ -857,3 +867,15 @@ def simulate_batch(gm: GraphMemory | DataflowGraph,
     final = _run_batch_jit(dict(g), base, tuple(names), policy_ids, sel_lats,
                            max_cycs, gm.nx, gm.ny)
     return [_unpack_result(final, gm, b, cfg=base) for b in range(len(cfgs))]
+
+
+def simulate_batch(gm: GraphMemory | DataflowGraph,
+                   cfgs: Sequence[OverlayConfig], *,
+                   nx: int | None = None,
+                   ny: int | None = None) -> list[SimResult]:
+    """DEPRECATED: use :func:`repro.run` with ``batch=cfgs``."""
+    warnings.warn(
+        "overlay.simulate_batch is deprecated; use "
+        "repro.run(gm, batch=cfgs, nx=, ny=)",
+        DeprecationWarning, stacklevel=2)
+    return _simulate_batch(gm, cfgs, nx=nx, ny=ny)

@@ -251,6 +251,43 @@ def fig1_full(target_nodes: int = 470_000, seed: int = 0, *,
 MEGAKERNEL_BENCH_GRAPHS = ("arrow_b4_s10_w8_seed3", "arrow_b8_s10_w8_seed3")
 
 
+def service_stream(n_queries: int = 32, distinct: int = 8,
+                   seed: int = 0) -> list:
+    """Deterministic replayed graph stream for the placement service.
+
+    Models the fleet workload the service layer amortizes: ``distinct``
+    small fig1-family arrow-LU graphs, each appearing once up front, then
+    ``n_queries - distinct`` repeats — a deterministic round-robin pass
+    first (when the stream is long enough, every distinct graph is
+    guaranteed at least one repeat, so cached-vs-fresh benchmark rows exist
+    for all of them), the rest drawn from a fixed PRNG. A stream of 32
+    queries over 8 graphs carries 75% repeats, all answerable from the
+    content-hash cache with zero simulations. Returns ``[(name,
+    DataflowGraph)]``; both the BENCH ``service`` section and the
+    ``python -m repro.service --smoke`` gate replay it.
+    """
+    if not 1 <= distinct <= n_queries:
+        raise ValueError(
+            f"need 1 <= distinct <= n_queries, got {distinct}/{n_queries}")
+    variants = []
+    for blocks in (2, 3, 4, 5):
+        for gseed in (1, 2):
+            variants.append((f"svc_arrow_b{blocks}_s6_w4_seed{gseed}",
+                             (blocks, 6, 4, gseed)))
+    if distinct > len(variants):
+        raise ValueError(f"at most {len(variants)} distinct stream graphs, "
+                         f"got {distinct}")
+    graphs = [(name, arrow_lu_graph(b, s, w, seed=sd))
+              for name, (b, s, w, sd) in variants[:distinct]]
+    rng = np.random.default_rng(seed)
+    stream = list(graphs)
+    n_repeats = n_queries - distinct
+    stream += [graphs[i % distinct] for i in range(min(n_repeats, distinct))]
+    for _ in range(n_repeats - distinct):
+        stream.append(graphs[int(rng.integers(0, distinct))])
+    return stream
+
+
 def warm_cache(names: list[str] | None = None) -> dict[str, int]:
     """Build (or load) the cacheable benchmark DAGs into the graph cache.
 

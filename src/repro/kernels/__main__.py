@@ -26,8 +26,9 @@ def smoke(fig1_only: bool = False) -> None:
 
     from repro.core import schedulers
     from repro.core import workloads as wl
+    from repro.api import run
     from repro.core.overlay import (OverlayConfig, device_graph, init_state,
-                                    make_engine_chunk_fn, simulate)
+                                    make_engine_chunk_fn)
     from repro.core.partition import build_graph_memory
 
     if not fig1_only:
@@ -36,8 +37,8 @@ def smoke(fig1_only: bool = False) -> None:
             gm = build_graph_memory(
                 g, 2, 2,
                 criticality_order=schedulers.get(sched).wants_criticality_order)
-            ref = simulate(gm, OverlayConfig(scheduler=sched, check_every=1))
-            r = simulate(gm, OverlayConfig(scheduler=sched, check_every=8,
+            ref = run(gm, OverlayConfig(scheduler=sched, check_every=1))
+            r = run(gm, OverlayConfig(scheduler=sched, check_every=8,
                                            engine="megakernel"))
             assert _stats(r) == _stats(ref), (sched, _stats(r), _stats(ref))
             np.testing.assert_array_equal(r.values, ref.values)
@@ -62,8 +63,8 @@ def smoke(fig1_only: bool = False) -> None:
             g, 16, 16,
             criticality_order=schedulers.get(sched).wants_criticality_order)
         t0 = time.time()
-        ref = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000))
-        r = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000,
+        ref = run(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000))
+        r = run(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000,
                                        engine="megakernel"))
         assert r.done and _stats(r) == _stats(ref), (sched, _stats(r),
                                                      _stats(ref))

@@ -30,7 +30,9 @@ from .anneal import (  # noqa: F401
     GuidedPlacementResult,
     PlacementResult,
     anneal_placement,
+    anneal_placements,
     anneal_tables,
+    anneal_tables_many,
 )
 from .api import (  # noqa: F401
     HILLCLIMB_SPACE,
@@ -39,6 +41,7 @@ from .api import (  # noqa: F401
     graph_memory,
     graph_memory_for_config,
     resolve,
+    shape_class,
     simulate_placements,
     uniform_graph_memories,
 )
@@ -51,3 +54,4 @@ from .coarsen import (  # noqa: F401
 from .cost import CostModel, build_cost_model, edge_tables, torus_hops  # noqa: F401
 from .slots import assign_slots  # noqa: F401
 from .spec import AnnealConfig, PlacementSpec, coerce  # noqa: F401
+from .spec import resolve as resolve_spec  # noqa: F401

@@ -20,7 +20,8 @@ def main() -> int:
     import numpy as np
 
     from repro.core import workloads as wl
-    from repro.core.overlay import OverlayConfig, simulate
+    from repro.api import run
+    from repro.core.overlay import OverlayConfig
     from repro.core.partition import build_graph_memory
     from repro import place
 
@@ -29,9 +30,9 @@ def main() -> int:
     acfg = place.AnnealConfig(replicas=6, rounds=12, steps=256, seed=0)
 
     # 1. identity == legacy path, bit-exact.
-    legacy = simulate(build_graph_memory(g, nx, ny),
+    legacy = run(build_graph_memory(g, nx, ny),
                       OverlayConfig(max_cycles=200_000))
-    via_place = simulate(g, OverlayConfig(max_cycles=200_000), nx=nx, ny=ny)
+    via_place = run(g, OverlayConfig(max_cycles=200_000), nx=nx, ny=ny)
     assert via_place.cycles == legacy.cycles, (via_place.cycles, legacy.cycles)
     np.testing.assert_array_equal(via_place.values, legacy.values)
 

@@ -482,6 +482,121 @@ def anneal_tables(
         proposals=acfg.replicas * acfg.rounds * acfg.steps)
 
 
+def anneal_tables_many(
+    n: int,
+    nx: int,
+    ny: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    w_edge: np.ndarray,
+    w_node: np.ndarray,
+    acfgs,
+    *,
+    inits=None,
+) -> list[PlacementResult]:
+    """Run MANY independent anneals of one item set as a single XLA program.
+
+    The service batch executor's fan-out: ``Q`` queries that share the graph
+    tables and grid (typically differing in ``seed`` / ``t_max``) vmap over
+    the query axis of the same jitted kernel — one compile, one dispatch,
+    ``Q x replicas`` ladders in flight. Every element is bit-identical to a
+    solo :func:`anneal_tables` call with the same config (integer cost
+    arithmetic and the counter-based PRNG are exact under vmap; asserted in
+    ``tests/test_service.py``).
+
+    Static kernel knobs must be uniform across ``acfgs``: ``replicas``,
+    ``rounds``, ``steps``, ``pressure_weight`` (they shape the program).
+    Per-query values may vary: ``seed`` (init + proposal stream) and
+    ``t_max`` (thresholds ride in as data). Guided anneals don't batch —
+    resolve those queries solo.
+    """
+    acfgs = list(acfgs)
+    if not acfgs:
+        return []
+    statics = {(a.replicas, a.rounds, a.steps, a.pressure_weight)
+               for a in acfgs}
+    if len(statics) != 1:
+        raise ValueError(
+            f"anneal_tables_many needs uniform (replicas, rounds, steps, "
+            f"pressure_weight) across the batch — they shape the compiled "
+            f"kernel; got {sorted(statics)}. Group queries by these knobs.")
+    num_pes = nx * ny
+    if inits is None:
+        inits = [None] * len(acfgs)
+    init_rows = []
+    for a, init in zip(acfgs, inits):
+        if init is None:
+            rng = np.random.default_rng(a.seed)
+            init = rng.integers(0, num_pes, size=n).astype(np.int32)
+        init = np.asarray(init, dtype=np.int32)
+        if init.shape != (n,):
+            raise ValueError(f"init must be [{n}] item->PE, got {init.shape}")
+        if init.size and (init.min() < 0 or init.max() >= num_pes):
+            raise ValueError("init placement references PEs outside the grid")
+        init_rows.append(init)
+
+    nbr, w_inc, is_out = incidence_from_edges(src, dst, w_edge, n)
+    init_pes = np.stack(init_rows)
+    thresholds = np.stack([_thresholds(a) for a in acfgs])
+    keys = jnp.stack([jax.random.key(a.seed) for a in acfgs])
+    run1 = functools.partial(
+        _anneal_jit, nx=nx, ny=ny, rounds=acfgs[0].rounds,
+        steps=acfgs[0].steps, pressure_weight=acfgs[0].pressure_weight)
+    w_node = np.asarray(w_node, np.int32)
+    with enable_x64():
+        best_pe, best_cost, init_cost = jax.vmap(
+            run1, in_axes=(0, None, None, None, None, 0, 0))(
+                init_pes, nbr, w_inc, is_out, w_node, thresholds, keys)
+    best_pe = np.asarray(best_pe)
+    best_cost = np.asarray(best_cost)
+    init_cost = np.asarray(init_cost)
+    out = []
+    for q in range(len(acfgs)):
+        b = int(best_cost[q].argmin())
+        out.append(PlacementResult(
+            node_pe=best_pe[q, b].astype(np.int32),
+            cost=int(best_cost[q, b]),
+            init_cost=int(init_cost[q]),
+            replica_costs=best_cost[q].astype(np.int64)))
+    return out
+
+
+def anneal_placements(
+    g: DataflowGraph,
+    nx: int,
+    ny: int,
+    acfgs,
+    *,
+    metric: str = "height",
+    inits=None,
+    model: CostModel | None = None,
+) -> list[PlacementResult]:
+    """Many independent :func:`anneal_placement` searches, one XLA program.
+
+    All queries share one cost model (so ``metric`` and the configs'
+    ``crit_scale`` must be uniform — the weight tables are data to the
+    vmapped kernel, but a per-query metric would mean per-query tables and
+    defeat the sharing). See :func:`anneal_tables_many` for the uniformity
+    contract and the bit-exactness guarantee vs solo runs.
+    """
+    acfgs = [a or AnnealConfig() for a in acfgs]
+    if not acfgs:
+        return []
+    crits = {a.crit_scale for a in acfgs}
+    pws = {a.pressure_weight for a in acfgs}
+    if model is None and (len(crits) != 1 or len(pws) != 1):
+        raise ValueError(
+            f"anneal_placements shares one cost model: crit_scale/"
+            f"pressure_weight must be uniform, got {crits}/{pws}")
+    model = model or build_cost_model(
+        g, nx, ny, metric=metric, crit_scale=acfgs[0].crit_scale,
+        pressure_weight=acfgs[0].pressure_weight)
+    src, dst = edge_endpoints(g)
+    return anneal_tables_many(
+        g.num_nodes, nx, ny, src, dst, np.asarray(model.w_edge),
+        np.asarray(model.w_node), acfgs, inits=inits)
+
+
 def anneal_placement(
     g: DataflowGraph,
     nx: int,

@@ -27,7 +27,8 @@ import numpy as np
 
 from ..core.graph import DataflowGraph
 from .anneal import anneal_placement
-from .spec import PlacementSpec, coerce
+from .spec import PlacementSpec
+from .spec import resolve as resolve_spec
 
 
 def resolve(g: DataflowGraph, nx: int, ny: int, placement=None, *,
@@ -48,7 +49,7 @@ def resolve(g: DataflowGraph, nx: int, ny: int, placement=None, *,
         return placement.astype(np.int32)
     from ..core import partition
 
-    spec = coerce(placement)
+    spec = resolve_spec(placement)
     num_pes = nx * ny
     guide = None
     if spec.guide == "surrogate":  # spec validation pins strategy to a search
@@ -86,7 +87,8 @@ def graph_memory(g: DataflowGraph, nx: int, ny: int, placement=None, *,
     """Resolve ``placement`` and pack the per-PE graph memory."""
     from ..core import partition
 
-    spec = coerce(placement) if not isinstance(placement, np.ndarray) else None
+    spec = (resolve_spec(placement)
+            if not isinstance(placement, np.ndarray) else None)
     node_pe = resolve(g, nx, ny, placement)
     return partition.build_graph_memory(
         g, nx, ny, placement=node_pe,
@@ -106,7 +108,8 @@ def graph_memory_for_config(g: DataflowGraph, nx: int, ny: int, cfg):
 def uniform_graph_memories(g: DataflowGraph, nx: int, ny: int, node_pes,
                            *, criticality_order: bool = True,
                            metric: str = "height",
-                           pad_lmax: bool = True) -> list:
+                           pad_lmax: bool = True,
+                           min_lmax: int = 0, min_emax: int = 0) -> list:
     """Pack one GraphMemory per ``[N]`` node -> PE vector, all with identical
     array shapes.
 
@@ -124,6 +127,14 @@ def uniform_graph_memories(g: DataflowGraph, nx: int, ny: int, node_pes,
 
     ``metric`` is one criticality metric for the whole set or one per
     placement (slot ordering only — it never moves the unified shapes).
+
+    ``min_lmax`` / ``min_emax`` raise the padding floor beyond this set's
+    own maxima. This is how *different graphs* share one jit cache entry:
+    the service batch executor computes the shape maxima across a whole
+    query group (:func:`shape_class`) and packs every graph's memories to
+    that shared class, so mixed-graph query batches compile once per shape
+    class instead of once per graph. Padding never moves cycle counts
+    (asserted in tests — empty slots/edges are inert).
     """
     from ..core.partition import build_graph_memory, packed_shape
 
@@ -137,13 +148,32 @@ def uniform_graph_memories(g: DataflowGraph, nx: int, ny: int, node_pes,
     # Shapes come from the packer's own derivation (partition.packed_shape),
     # so the identical-shapes guarantee cannot drift from the packing rule.
     shapes = [packed_shape(g, pe, nx * ny) for pe in node_pes]
-    lmax = max((l for l, _ in shapes), default=1)
-    emax = max((e for _, e in shapes), default=1)
+    lmax = max([l for l, _ in shapes] + [min_lmax, 1])
+    emax = max([e for _, e in shapes] + [min_emax, 1])
     return [build_graph_memory(
         g, nx, ny, placement=pe, metric=m,
         criticality_order=criticality_order,
         min_lmax=lmax if pad_lmax else 0, min_emax=emax)
         for pe, m in zip(node_pes, metrics)]
+
+
+def shape_class(graphs_and_pes, nx: int, ny: int) -> tuple[int, int]:
+    """Shared ``(lmax, emax)`` padding floor for a mixed-graph query group.
+
+    ``graphs_and_pes`` is an iterable of ``(DataflowGraph, [N] node_pe)``
+    pairs. The returned maxima, fed to :func:`uniform_graph_memories` (or
+    :func:`evaluate_placements`) as ``min_lmax`` / ``min_emax``, put every
+    graph's packed memory in ONE padded shape class, so the batched engine's
+    jit cache holds one entry for the whole group — the shape-churn fix for
+    query batches that mix graphs.
+    """
+    from ..core.partition import packed_shape
+
+    lmax, emax = 1, 1
+    for g, pe in graphs_and_pes:
+        l, e = packed_shape(g, np.asarray(pe, dtype=np.int32), nx * ny)
+        lmax, emax = max(lmax, l), max(emax, e)
+    return lmax, emax
 
 
 def _latency_depends_on_words(cfg_list) -> bool:
@@ -175,16 +205,17 @@ def simulate_placements(g: DataflowGraph, nx: int, ny: int, node_pes, cfg=None,
     out = []
     for gm in gms:
         if mesh is None:
-            out.append(overlay.simulate_batch(gm, [cfg])[0])
+            out.append(overlay._simulate_batch(gm, [cfg])[0])
         else:
-            out.append(distributed.simulate_batch_sharded(gm, mesh, [cfg])[0])
+            out.append(distributed._simulate_batch_sharded(gm, mesh, [cfg])[0])
     return out
 
 
 def evaluate_placements(g: DataflowGraph, nx: int, ny: int, placements,
                         cfgs=None, mesh=None, *, prune: str | None = None,
                         keep_top: int = 8, surrogate=None,
-                        surrogate_train: int = 24) -> dict:
+                        surrogate_train: int = 24,
+                        min_lmax: int = 0, min_emax: int = 0) -> dict:
     """Score candidate placements by simulated cycle count.
 
     Args:
@@ -207,6 +238,9 @@ def evaluate_placements(g: DataflowGraph, nx: int, ny: int, placements,
         one pruned candidate set serves every config, so a placement that
         excels only under a later config can be pruned away; prune per
         config in separate calls when that matters.
+      min_lmax, min_emax: raise the candidate memories' padding floor so
+        *separate* calls over different graphs land in one padded shape
+        class and reuse one compiled program (see :func:`shape_class`).
 
     Returns:
       ``{name: SimResult}`` (or ``{name: [SimResult, ...]}`` with a config
@@ -233,7 +267,7 @@ def evaluate_placements(g: DataflowGraph, nx: int, ny: int, placements,
     node_pes = [resolve(g, nx, ny, placements[k]) for k in names]
     # Slot ordering honors each spec's own criticality metric (explicit
     # arrays have no spec and take the default), exactly like graph_memory.
-    metrics = [coerce(placements[k]).metric
+    metrics = [resolve_spec(placements[k]).metric
                if not isinstance(placements[k], np.ndarray) else "height"
                for k in names]
 
@@ -257,13 +291,21 @@ def evaluate_placements(g: DataflowGraph, nx: int, ny: int, placements,
 
     gms = uniform_graph_memories(
         g, nx, ny, node_pes, criticality_order=wants, metric=metrics,
-        pad_lmax=not _latency_depends_on_words(cfg_list))
+        pad_lmax=not _latency_depends_on_words(cfg_list),
+        min_lmax=min_lmax, min_emax=min_emax)
+    # The memories are already placed, so cfg.placement is dead weight here —
+    # but it is a jit *static* argument, and two sweeps differing only in the
+    # spec they were resolved from would needlessly compile twice. Strip it
+    # to the canonical identity so equal-shape candidate sets share one
+    # compiled program no matter which placement specs produced them.
+    import dataclasses as _dc
+    cfg_list = [_dc.replace(c, placement=None) for c in cfg_list]
     out = {}
     for name, gm in zip(names, gms):
         if mesh is None:
-            res = overlay.simulate_batch(gm, cfg_list)
+            res = overlay._simulate_batch(gm, cfg_list)
         else:
-            res = distributed.simulate_batch_sharded(gm, mesh, cfg_list)
+            res = distributed._simulate_batch_sharded(gm, mesh, cfg_list)
         out[name] = res[0] if single else res
     return out
 
@@ -296,7 +338,7 @@ def config_hillclimb(g: DataflowGraph, nx: int, ny: int, *,
     trajectory, best config, best cycles, evaluation count, wall seconds.
     """
     from ..core import schedulers
-    from ..core.overlay import OverlayConfig, simulate_batch
+    from ..core.overlay import OverlayConfig, _simulate_batch
 
     space = dict(space or HILLCLIMB_SPACE)
     if space.get("scheduler") is None:
@@ -335,7 +377,8 @@ def config_hillclimb(g: DataflowGraph, nx: int, ny: int, *,
                                   select_latency=points[i]["select_latency"],
                                   eject_capacity=eject,
                                   max_cycles=max_cycles) for i in idxs]
-            for i, r in zip(idxs, simulate_batch(gm_for(strategy, wants), cfgs)):
+            for i, r in zip(idxs, _simulate_batch(gm_for(strategy, wants),
+                                                  cfgs)):
                 c = r.cycles if r.done else float("inf")
                 cycles[i] = seen[key(points[i])] = c
         return cycles

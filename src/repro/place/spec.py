@@ -147,10 +147,16 @@ class PlacementSpec:
 IDENTITY = PlacementSpec()
 
 
-def coerce(placement) -> PlacementSpec:
-    """Normalize the ``OverlayConfig.placement`` field to a PlacementSpec.
+def resolve(placement) -> PlacementSpec:
+    """Normalize any user-facing placement value to a :class:`PlacementSpec`.
 
-    Accepts ``None`` (identity), a strategy-name string, or a spec.
+    Accepts ``None`` (identity), a strategy-name string, or a spec. This is
+    the single resolution point for ``str | PlacementSpec | None``:
+    ``OverlayConfig.__post_init__`` runs every ``placement=`` through it, so
+    downstream code (the engines, :mod:`repro.place.api`, the service layer)
+    only ever sees canonical specs — two configs that mean the same layout
+    compare and hash equal, which keeps ``jax.jit`` static-argument caches
+    and the service content-hash keys from fragmenting on spelling.
     """
     if placement is None:
         return IDENTITY
@@ -161,3 +167,7 @@ def coerce(placement) -> PlacementSpec:
     raise TypeError(
         f"placement must be None, a strategy name, or a PlacementSpec; "
         f"got {placement!r}")
+
+
+#: Backwards-compatible alias — ``resolve`` is the canonical name.
+coerce = resolve

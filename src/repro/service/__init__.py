@@ -1,0 +1,34 @@
+"""repro.service — batched placement-as-a-service with content-hash caching.
+
+The fleet-scale spelling of the paper's one-time static placement pass:
+answer a *stream* of (graph, grid, objective, budget) queries, where repeat
+graphs are free and search cost amortizes across the stream.
+
+  * :class:`PlacementQuery` / :class:`QueryResult` — the query schema;
+  * :class:`PlacementService` — the front door: content-hash result cache
+    (:class:`ResultCache`, :func:`query_key`), vmapped multi-query anneal
+    fan-out, one shared surrogate per (graph, grid) family, shape-class
+    batched simulation;
+  * :func:`explore` / :func:`pareto_front` — the design-space explorer
+    producing tracked Pareto frontiers over (scheduler, eject_policy,
+    grid, placement);
+  * ``python -m repro.service --smoke`` — the tier-1 CI gate.
+
+Everything stays bit-deterministic, so cached results and frontier points
+are CI-gated in the BENCH ``service`` section like every other tracked
+cycle count. See docs/service.md.
+"""
+from .cache import CachedResult, ResultCache, service_cache_dir  # noqa: F401
+from .explore import DEFAULT_SPACE, explore, pareto_front  # noqa: F401
+from .hashing import (  # noqa: F401
+    config_token,
+    graph_digest,
+    query_digest,
+    query_key,
+)
+from .service import (  # noqa: F401
+    PlacementQuery,
+    PlacementService,
+    QueryResult,
+    effective_config,
+)

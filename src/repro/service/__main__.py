@@ -1,0 +1,116 @@
+"""Service CLI: ``python -m repro.service [--smoke]``.
+
+Default mode replays the deterministic ``workloads.service_stream`` through
+a fresh :class:`~repro.service.service.PlacementService` and prints the
+amortization story: per-query hit/miss, then the cache + execution
+counters.
+
+``--smoke`` is the CI tier-1 gate. On a small stream it asserts the
+service contract end to end:
+
+  * repeat queries answer from the content-hash cache with ZERO additional
+    simulations and bit-exact cycles (counter-asserted);
+  * a batched multi-query anneal fan-out returns row-for-row the same
+    placements and cycle counts as solo queries;
+  * the design-space explorer's Pareto frontier is deterministic under
+    replay.
+
+Exits non-zero on any violation.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def smoke() -> None:
+    import numpy as np
+
+    from repro.core import workloads as wl
+    from repro.core.overlay import OverlayConfig
+    from repro.service import PlacementQuery, PlacementService, explore
+
+    cfg = OverlayConfig(placement="anneal", max_cycles=200_000)
+    stream = wl.service_stream(n_queries=8, distinct=3, seed=0)
+
+    # 1. Repeats are free: zero extra simulations, bit-exact integers.
+    svc = PlacementService()
+    answers = {}
+    for name, g in stream:
+        sims_before = svc.counters["simulations"]
+        r = svc.query(PlacementQuery(graph=g, nx=4, ny=4, budget=2048,
+                                     cfg=cfg))
+        if name in answers:
+            first = answers[name]
+            assert r.cached, f"{name}: repeat missed the cache"
+            assert svc.counters["simulations"] == sims_before, (
+                f"{name}: cache hit ran a simulation")
+            assert r.cycles == first.cycles, (name, r.cycles, first.cycles)
+            assert np.array_equal(r.node_pe, first.node_pe), name
+            assert r.stats == first.stats, name
+        else:
+            assert not r.cached and r.cycles is not None, name
+            answers[name] = r
+    rep = svc.report()
+    assert rep["cache_hits"] == len(stream) - len(answers), rep
+    assert rep["simulations"] == len(answers), rep
+    print(f"service_smoke_stream,0.0,hit_rate={rep['cache_hit_rate']}")
+
+    # 2. Batched anneal fan-out == solo queries, row for row.
+    g = stream[0][1]
+    seeds = (0, 1, 2)
+    mk = lambda s: PlacementQuery(
+        graph=g, nx=4, ny=4, budget=2048,
+        cfg=OverlayConfig(placement=wl_spec(s), max_cycles=200_000))
+    batched = PlacementService().run_batch([mk(s) for s in seeds])
+    solo = [PlacementService().query(mk(s)) for s in seeds]
+    for s, b, r in zip(seeds, batched, solo):
+        assert np.array_equal(b.node_pe, r.node_pe), f"seed {s}"
+        assert b.cycles == r.cycles, (s, b.cycles, r.cycles)
+    print(f"service_smoke_batch,0.0,rows={len(seeds)}")
+
+    # 3. Frontier determinism under replay.
+    space = {"grid": ((2, 2), (4, 4)), "placement": ("identity", "anneal")}
+    rec1 = explore(g, space=space, budget=2048, max_cycles=200_000)
+    rec2 = explore(g, space=space, budget=2048, max_cycles=200_000)
+    assert rec1["frontier"] == rec2["frontier"], "frontier not deterministic"
+    assert rec1["points"] == rec2["points"], "points not deterministic"
+    front = ",".join(f"{p['name']}={p['cycles']}" for p in rec1["frontier"])
+    print(f"service_smoke_frontier,0.0,{front}")
+    print("SERVICE_SMOKE_OK")
+
+
+def wl_spec(seed: int):
+    from repro.place import PlacementSpec
+
+    return PlacementSpec(strategy="anneal", seed=seed)
+
+
+def demo() -> None:
+    from repro.core.overlay import OverlayConfig
+    from repro.core.workloads import service_stream
+    from repro.service import PlacementQuery, PlacementService
+
+    svc = PlacementService()
+    cfg = OverlayConfig(placement="anneal", max_cycles=1_000_000)
+    for name, g in service_stream(n_queries=16, distinct=4, seed=0):
+        r = svc.query(PlacementQuery(graph=g, nx=4, ny=4, budget=4096,
+                                     cfg=cfg))
+        tag = "hit " if r.cached else "miss"
+        print(f"{tag} {name}: {r.cycles} cycles (key {r.key:#x})")
+    for k, v in sorted(svc.report().items()):
+        print(f"  {k} = {v}")
+
+
+def main(argv: list[str]) -> int:
+    if "--smoke" in argv:
+        smoke()
+        return 0
+    if not [a for a in argv if a.startswith("-")]:
+        demo()
+        return 0
+    print(__doc__)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -5,8 +5,9 @@ The paper's headline numbers are aggregates; this package instruments *why*
 eject-port contention, scheduler ready-set depth, and stall attribution —
 without perturbing the model. Opt in via::
 
+    import repro
     from repro.telemetry import TelemetrySpec
-    r = simulate(gm, OverlayConfig(telemetry=TelemetrySpec()))
+    r = repro.run(gm, OverlayConfig(telemetry=TelemetrySpec()))
     r.telemetry.report()                      # p50/p95 link util, stalls, ...
     r.telemetry.export_perfetto("trace.json") # open in ui.perfetto.dev
 

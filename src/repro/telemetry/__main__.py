@@ -28,7 +28,8 @@ def _trace_path(out_dir: str, name: str) -> str:
 
 def smoke(out_dir: str) -> None:
     from repro.core import workloads as wl
-    from repro.core.overlay import OverlayConfig, simulate
+    from repro.api import run
+    from repro.core.overlay import OverlayConfig
     from repro.core.partition import build_graph_memory
     from repro.telemetry import TelemetrySpec
     from repro.telemetry.perfetto import track_count
@@ -37,8 +38,8 @@ def smoke(out_dir: str) -> None:
     gm = build_graph_memory(g, 2, 2, criticality_order=True)
     spec = TelemetrySpec(buckets=16, bucket_cycles=8)
     for sched in ("ooo", "inorder"):
-        base = simulate(gm, OverlayConfig(scheduler=sched))
-        r = simulate(gm, OverlayConfig(scheduler=sched, telemetry=spec))
+        base = run(gm, OverlayConfig(scheduler=sched))
+        r = run(gm, OverlayConfig(scheduler=sched, telemetry=spec))
         tel = r.telemetry
         assert r.done and r.cycles == base.cycles, (sched, r.cycles, base.cycles)
         assert int(tel.traces["pe_busy"].sum()) == r.busy_cycles
@@ -64,7 +65,8 @@ def smoke(out_dir: str) -> None:
 def fig1(out_dir: str) -> None:
     from repro.core import schedulers
     from repro.core import workloads as wl
-    from repro.core.overlay import OverlayConfig, simulate
+    from repro.api import run
+    from repro.core.overlay import OverlayConfig
     from repro.core.partition import build_graph_memory
     from repro.telemetry import TelemetrySpec
 
@@ -76,7 +78,7 @@ def fig1(out_dir: str) -> None:
             g, 16, 16,
             criticality_order=schedulers.get(sched).wants_criticality_order)
         t0 = time.time()
-        r = simulate(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000,
+        r = run(gm, OverlayConfig(scheduler=sched, max_cycles=8_000_000,
                                        telemetry=spec))
         assert r.done, sched
         path = _trace_path(out_dir, f"fig1_{name}_{sched}")

@@ -163,7 +163,7 @@ def test_simulate_batch_sharded_matches_serial():
 
 
 @pytest.mark.parametrize("sched", ["ooo", "scan", "lru_flat"])
-def test_use_pallas_bit_identical(sched):
+def test_select_engine_bit_identical(sched):
     # interpret=True on CPU: same fused kernels the TPU path compiles
     g_small = wl.layered_dag(4, 6, seed=3)
     gm_small = build_graph_memory(
@@ -171,16 +171,16 @@ def test_use_pallas_bit_identical(sched):
         criticality_order=schedulers.get(sched).wants_criticality_order)
     ref = simulate(gm_small, OverlayConfig(scheduler=sched, check_every=1))
     r = simulate(gm_small, OverlayConfig(scheduler=sched, check_every=1,
-                                         use_pallas=True))
+                                         engine="select"))
     assert _stats(r) == _stats(ref), sched
     np.testing.assert_array_equal(r.values, ref.values)
 
 
-def test_use_pallas_batched_bit_identical():
+def test_select_engine_batched_bit_identical():
     # the Pallas kernels must also batch correctly under the vmapped engine
     g = wl.layered_dag(4, 6, seed=3)
     gm = build_graph_memory(g, 2, 2, criticality_order=True)
-    cfgs = [OverlayConfig(scheduler=p, use_pallas=True, max_cycles=100_000)
+    cfgs = [OverlayConfig(scheduler=p, engine="select", max_cycles=100_000)
             for p in ("ooo", "scan")]
     for cfg, rb in zip(cfgs, simulate_batch(gm, cfgs)):
         rs = simulate(gm, OverlayConfig(scheduler=cfg.scheduler,
@@ -189,12 +189,12 @@ def test_use_pallas_batched_bit_identical():
         np.testing.assert_array_equal(rb.values, rs.values)
 
 
-def test_simulate_batch_rejects_mixed_use_pallas():
+def test_simulate_batch_rejects_mixed_engine():
     g = wl.reduction_tree(16)
     gm = build_graph_memory(g, 2, 2)
-    with pytest.raises(ValueError, match="use_pallas"):
-        simulate_batch(gm, [OverlayConfig(use_pallas=False),
-                            OverlayConfig(use_pallas=True)])
+    with pytest.raises(ValueError, match="engine"):
+        simulate_batch(gm, [OverlayConfig(engine="jnp"),
+                            OverlayConfig(engine="select")])
 
 
 SHARDED_SCRIPT = r"""

@@ -2,7 +2,7 @@
 interpret-mode oracle tests against the pure-jnp reference for every
 registered policy x chunk depth x execution engine, the single-dispatch
 lowering guarantee, the engine-aware ``check_every`` autotune, and the
-``use_pallas`` -> ``engine`` deprecation shim.
+removal of the old ``use_pallas`` spelling (``engine=`` is the only knob).
 
 The megakernel's correctness argument is that its in-kernel body is the
 *same* cycle function the reference engine scans, carried across the chunk
@@ -155,13 +155,10 @@ def test_resolve_check_every_keys_on_engine():
                                num_devices=8) == 32
 
 
-def test_use_pallas_deprecation_shim():
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        cfg = OverlayConfig(use_pallas=True)
-    assert cfg.engine == "select"
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    # the modern spelling does not warn
+def test_use_pallas_removed():
+    # the shim is gone: engine= is the only spelling
+    with pytest.raises(TypeError):
+        OverlayConfig(use_pallas=True)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
         OverlayConfig(engine="select")
